@@ -1,0 +1,33 @@
+"""Fig. 7: ablation of negative sampling (NS) and versatile assessor (Assor),
+M=6, labeled ratio 0.3."""
+from __future__ import annotations
+
+from benchmarks.common import fgl_setup, run_method, write_result
+
+
+VARIANTS = {
+    "FedAvg-fusion (baseline)": ("FedAvg-fusion", {}),
+    "FedGL w/o NS+Assor": ("FedGL", dict(use_negative_sampling=False,
+                                         use_assessor=False)),
+    "FedGL w/o NS": ("FedGL", dict(use_negative_sampling=False)),
+    "FedGL w/o Assor": ("FedGL", dict(use_assessor=False)),
+    "FedGL (full)": ("FedGL", {}),
+    "SpreadFGL (full)": ("SpreadFGL", {}),
+}
+
+
+def main(fast: bool = False):
+    print("[bench] Fig. 7 — ablation (NS / Assor)")
+    rounds = 8 if fast else 12
+    out = {}
+    _, batch, cfg = fgl_setup("cora", 6)
+    for label, (method, kw) in VARIANTS.items():
+        hist = run_method(method, cfg, batch, rounds=rounds, **kw)
+        out[label] = {"acc": max(hist["acc"]), "f1": max(hist["f1"])}
+        print(f"  {label:28s} ACC={out[label]['acc']:.3f}", flush=True)
+    write_result("fig7_ablation", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Table II: node classification accuracy, 4 datasets × 5 methods × M clients.
+
+Reduced: datasets are SBM stand-ins at scale 0.15-0.2, M ∈ {6, 12} (the
+paper's {6,9,12,15}), 14 communication rounds, averaged over seeds. The claim
+validated is the ORDERING: SpreadFGL/FedGL ≥ FedAvg-fusion/FedSage+ >
+LocalFGL.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import METHODS, fgl_setup, run_method, write_result
+
+
+def run(plan, rounds=14, seeds=(1, 2, 3)) -> dict:
+    table = {}
+    for ds, m in plan:
+        per_method = {method: {"acc": [], "f1": []} for method in METHODS}
+        for seed in seeds:
+            _, batch, cfg = fgl_setup(ds, m, seed=seed, scale=0.2)
+            for method in METHODS:
+                hist = run_method(method, cfg, batch, rounds=rounds, seed=seed)
+                per_method[method]["acc"].append(max(hist["acc"]))
+                per_method[method]["f1"].append(max(hist["f1"]))
+        for method in METHODS:
+            key = f"{ds}/M={m}/{method}"
+            accs = per_method[method]["acc"]
+            table[key] = {"acc": float(np.mean(accs)),
+                          "acc_std": float(np.std(accs)),
+                          "f1": float(np.mean(per_method[method]["f1"]))}
+            print(f"  {key:44s} ACC={table[key]['acc']:.3f}"
+                  f"±{table[key]['acc_std']:.3f}", flush=True)
+    write_result("table2_accuracy", table)
+    return table
+
+
+def main(fast: bool = False):
+    print("[bench] Table II — accuracy")
+    if fast:
+        return run([("cora", 6)], rounds=8, seeds=(1,))
+    plan = [("cora", 6), ("cora", 12), ("citeseer", 6), ("citeseer", 12),
+            ("wikics", 6), ("coauthor_cs", 6)]
+    return run(plan)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Kernel micro-benchmarks: µs/call of the jnp reference path on CPU plus the
+interpret-mode Pallas check (TPU wall-time is N/A in this container — the
+kernel's TPU performance claim lives in the roofline analysis instead)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit, write_result
+from repro.kernels import ops, ref
+
+
+def main(fast: bool = False):
+    print("[bench] kernels — µs/call (CPU reference path)")
+    key = jax.random.key(0)
+    rows = {}
+
+    q = jax.random.normal(key, (1, 8, 512, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 8, 512, 64), jnp.float32)
+    v = jax.random.normal(key, (1, 8, 512, 64), jnp.float32)
+    fn = jax.jit(lambda: ref.flash_attention(q, k, v, causal=True))
+    rows["flash_attention_ref_512"] = timeit(fn)
+
+    a = (jax.random.uniform(key, (512, 512)) < 0.1).astype(jnp.float32)
+    h = jax.random.normal(key, (512, 256), jnp.float32)
+    rows["sage_aggregate_ref_512"] = timeit(jax.jit(lambda: ref.sage_aggregate(a, h)))
+
+    rowsm = jax.random.normal(key, (256, 15), jnp.float32)
+    hm = jax.random.normal(key, (4096, 15), jnp.float32)
+    rows["sim_block_ref_4k"] = timeit(jax.jit(lambda: ref.sim_block(rowsm, hm)))
+
+    if not fast:
+        rows["flash_attention_pallas_interpret_256"] = timeit(
+            lambda: ops.mha(q[:, :, :256], k[:, :, :256], v[:, :, :256],
+                            causal=True, interpret=True), iters=2)
+
+    for k2, v2 in rows.items():
+        print(f"  {k2:42s} {v2:12.1f} us")
+    write_result("kernels_micro", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Roofline table: aggregates the dry-run JSON records into the §Roofline
+report (terms in seconds, dominant bottleneck, MODEL_FLOPS ratio)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import RESULTS, write_result
+
+DRYRUN_DIR = RESULTS / "dryrun"
+
+
+def load_records():
+    recs = []
+    if not DRYRUN_DIR.exists():
+        return recs
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def main(fast: bool = False):
+    print("[bench] roofline table (from dry-run records)")
+    recs = load_records()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    failed = [r for r in recs if r.get("status") == "failed"]
+    if not recs:
+        print("  (no dry-run records found — run "
+              "`python -m repro.launch.dryrun --all --mesh both`)")
+        return {}
+    hdr = (f"  {'arch':22s} {'shape':12s} {'mesh':6s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'coll_s':>10s} {'dominant':>10s} {'useful':>7s}")
+    print(hdr)
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        print(f"  {r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} "
+              f"{r['compute_s']:10.4f} {r['memory_s']:10.4f} "
+              f"{r['collective_s']:10.4f} {r['dominant']:>10s} "
+              f"{r['useful_flops_ratio']:7.3f}")
+    for r in skipped:
+        print(f"  {r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} "
+              f"{'SKIPPED (documented)':>40s}")
+    for r in failed:
+        print(f"  {r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} "
+              f"{'FAILED':>40s}")
+    summary = {"ok": len(ok), "skipped": len(skipped), "failed": len(failed)}
+    print(f"  totals: {summary}")
+    write_result("roofline_table", {"records": recs, "summary": summary})
+    _write_markdown(ok, skipped, failed)
+    return summary
+
+
+def _write_markdown(ok, skipped, failed):
+    """Render the §Roofline markdown table (pasted into EXPERIMENTS.md)."""
+    lines = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | "
+        "dominant | useful_flops | mem/device GB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        tag = r.get("extra", {}).get("tag", "")
+        arch = r["arch"] + (f" [{tag}]" if tag else "")
+        mem = r.get("memory_per_device")
+        mem_s = f"{mem/2**30:.1f}" if mem else "-"
+        lines.append(
+            f"| {arch} | {r['shape']} | {r['mesh']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | {r['dominant']} | "
+            f"{r['useful_flops_ratio']:.3f} | {mem_s} |")
+    for r in skipped:
+        lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                     f"SKIPPED | — | — |")
+    for r in failed:
+        lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                     f"FAILED | — | — |")
+    (RESULTS / "roofline_table.md").write_text("\n".join(lines) + "\n")
+
+
+if __name__ == "__main__":
+    main()

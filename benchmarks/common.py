@@ -1,0 +1,79 @@
+"""Shared helpers for the benchmark harness.
+
+All FGL benchmarks run on reduced-scale synthetic stand-ins (see DESIGN.md §8)
+with settings where the paper's *orderings* are reproducible on CPU in
+minutes: feature_noise=3.0, signal_ratio=0.5 (features alone are insufficient,
+neighbor structure carries class signal — the regime the paper targets).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+from repro.core.baselines import FedAvgFusion, FedSagePlus, LocalFGL
+from repro.core.partition import partition_graph
+from repro.core.spreadfgl import make_fedgl, make_spreadfgl
+from repro.core.types import FGLConfig
+from repro.data.synthetic_graphs import DATASETS, make_sbm_graph
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+SCALE = 0.15
+NOISE = 3.0
+SIGNAL = 0.5
+ROUNDS = 12
+
+
+def fgl_setup(dataset: str, num_clients: int, *, seed: int = 1,
+              label_ratio: float = 0.3, aug_max: int = 12, scale: float = None):
+    g = make_sbm_graph(DATASETS[dataset], scale=scale or SCALE, seed=seed,
+                       feature_noise=NOISE, signal_ratio=SIGNAL)
+    batch, assign = partition_graph(g, num_clients, aug_max=aug_max,
+                                    seed=0, label_ratio=label_ratio)
+    cfg = FGLConfig(hidden_dim=32, local_rounds=4, imputation_interval=2,
+                    top_k_links=4, aug_max=aug_max, label_ratio=label_ratio)
+    return g, batch, cfg
+
+
+def make_method(name: str, cfg, batch, **kw):
+    return {
+        "LocalFGL": lambda: LocalFGL(cfg, batch, **kw),
+        "FedAvg-fusion": lambda: FedAvgFusion(cfg, batch, **kw),
+        "FedSage+": lambda: FedSagePlus(cfg, batch, **kw),
+        "FedGL": lambda: make_fedgl(cfg, batch, **kw),
+        "SpreadFGL": lambda: make_spreadfgl(cfg, batch, num_servers=3, **kw),
+    }[name]()
+
+
+METHODS = ("LocalFGL", "FedAvg-fusion", "FedSage+", "FedGL", "SpreadFGL")
+
+
+def run_method(name: str, cfg, batch, *, rounds: int = ROUNDS, seed: int = 0,
+               **kw) -> Dict[str, list]:
+    tr = make_method(name, cfg, batch, **kw)
+    _, hist = tr.fit(jax.random.key(seed), batch, rounds=rounds)
+    return hist
+
+
+def write_result(name: str, payload) -> pathlib.Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / f"{name}.json"
+    path.write_text(json.dumps(payload, indent=1))
+    return path
+
+
+def timeit(fn: Callable, *, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)

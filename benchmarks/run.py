@@ -1,0 +1,80 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+
+Emits a ``name,us_per_call,derived`` CSV summary at the end (per-benchmark
+wall time + headline derived metric), and writes JSON details under
+benchmarks/results/.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import (bench_ablation, bench_accuracy, bench_convergence,
+                        bench_k_sensitivity, bench_kernels, bench_load_balance,
+                        bench_roofline)
+
+BENCHES = {
+    "table2_accuracy": bench_accuracy.main,
+    "fig7_ablation": bench_ablation.main,
+    "fig8_convergence": bench_convergence.main,
+    "fig5_k_sensitivity": bench_k_sensitivity.main,
+    "load_balance": bench_load_balance.main,
+    "kernels": bench_kernels.main,
+    "roofline": bench_roofline.main,
+}
+
+
+def _headline(name: str, result) -> str:
+    try:
+        if name == "table2_accuracy":
+            spread = [v["acc"] for k, v in result.items() if "SpreadFGL" in k]
+            local = [v["acc"] for k, v in result.items() if "LocalFGL" in k]
+            return (f"spread_acc={sum(spread)/len(spread):.3f};"
+                    f"local_acc={sum(local)/len(local):.3f}")
+        if name == "fig7_ablation":
+            return (f"full={result['FedGL (full)']['acc']:.3f};"
+                    f"base={result['FedAvg-fusion (baseline)']['acc']:.3f}")
+        if name == "fig8_convergence":
+            auls = {k.split("/")[-1]: v["area_under_loss"]
+                    for k, v in result.items() if k.startswith("cora")}
+            return (f"aul_spread={auls.get('SpreadFGL', 0):.2f};"
+                    f"aul_fedavg={auls.get('FedAvg-fusion', 0):.2f}")
+        if name == "fig5_k_sensitivity":
+            return ";".join(f"K{k}={v['acc']:.3f}" for k, v in result["K"].items())
+        if name == "load_balance":
+            return f"peak_load_reduction={result['peak_load_reduction']:.2f}x"
+        if name == "kernels":
+            return f"n_kernels={len(result)}"
+        if name == "roofline":
+            return (f"ok={result.get('ok', 0)};skipped={result.get('skipped', 0)};"
+                    f"failed={result.get('failed', 0)}")
+    except Exception as e:  # noqa: BLE001
+        return f"headline_error={e!r}"
+    return ""
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced rounds/datasets (CI-sized)")
+    ap.add_argument("--only", choices=tuple(BENCHES))
+    args = ap.parse_args()
+
+    rows = []
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        result = fn(fast=args.fast)
+        dt = (time.time() - t0) * 1e6
+        rows.append((name, dt, _headline(name, result)))
+
+    print("\nname,us_per_call,derived")
+    for name, dt, derived in rows:
+        print(f"{name},{dt:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

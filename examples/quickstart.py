@@ -1,0 +1,42 @@
+"""Quickstart: FedGL on a synthetic Cora stand-in, 10 communication rounds.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Trains the paper's full pipeline (GraphSAGE clients + graph imputation
+generator + versatile assessor + negative sampling) on one edge server and
+prints accuracy per round — a 2-minute CPU demonstration of the public API.
+"""
+import jax
+
+from repro.core.partition import count_missing_links, partition_graph
+from repro.core.spreadfgl import make_fedgl
+from repro.core.types import FGLConfig
+from repro.data.synthetic_graphs import DATASETS, make_sbm_graph
+
+
+def main():
+    # 1. Data: SBM stand-in for Cora (offline container), split across 6
+    #    clients with all cross-client links DELETED (the missing links).
+    graph = make_sbm_graph(DATASETS["cora"], scale=0.15, seed=1,
+                           feature_noise=3.0, signal_ratio=0.5)
+    batch, assign = partition_graph(graph, num_clients=6, aug_max=12, seed=0,
+                                    label_ratio=0.3)
+    print(f"graph: {graph.num_nodes} nodes, {graph.num_edges} edges, "
+          f"{graph.num_classes} classes")
+    print(f"deleted cross-client links: {count_missing_links(graph, assign)}")
+
+    # 2. FedGL (Sec. III-B): one edge server, imputation every K=2 rounds.
+    cfg = FGLConfig(hidden_dim=32, local_rounds=4, imputation_interval=2,
+                    top_k_links=4, aug_max=12)
+    trainer = make_fedgl(cfg, batch)
+
+    # 3. Train (Algorithm 1) and report.
+    state, hist = trainer.fit(jax.random.key(0), batch, rounds=10)
+    for r, (loss, acc, f1) in enumerate(zip(hist["loss"], hist["acc"],
+                                            hist["f1"])):
+        print(f"round {r:2d}  loss={loss:7.4f}  acc={acc:.3f}  f1={f1:.3f}")
+    print(f"best accuracy: {max(hist['acc']):.3f}")
+
+
+if __name__ == "__main__":
+    main()

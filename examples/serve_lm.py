@@ -1,0 +1,47 @@
+"""Batched serving example: prefill + greedy decode with KV/recurrent caches.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch qwen3-4b
+
+Serves a reduced-config model: batches 4 prompts, prefills them in one shot,
+then decodes 24 tokens per request. Works for every assigned architecture
+(GQA KV caches, MoE experts, mamba/mLSTM recurrent states, whisper/VLM
+cross-attention memory).
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.data.lm_data import memory_stub
+from repro.models import transformer
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCH_IDS, default="qwen3-4b")
+    ap.add_argument("--steps", type=int, default=24)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = configs.get_config(args.arch, "smoke")
+    params = transformer.init_model(jax.random.key(0), cfg)
+    engine = ServeEngine(cfg, params, max_len=args.prompt_len + args.steps + 8)
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           size=(args.batch, args.prompt_len)).astype(np.int32)
+    memory = memory_stub(cfg, args.batch)
+    print(f"[serve] {cfg.name}: {args.batch} requests × "
+          f"{args.prompt_len} prompt tokens -> {args.steps} new tokens")
+    out = engine.generate(prompts, steps=args.steps,
+                          temperature=args.temperature, memory=memory)
+    for i, row in enumerate(out):
+        print(f"  request {i}: {row.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

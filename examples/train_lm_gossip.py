@@ -1,0 +1,106 @@
+"""End-to-end LM training driver with SpreadFGL gossip across simulated pods.
+
+  PYTHONPATH=src python examples/train_lm_gossip.py --steps 200
+
+Trains a ~125M-parameter xLSTM (the paper's aggregation technique lifted to
+LM training, DESIGN.md §3) on 4 simulated pods: each pod takes local steps on
+its batch shard; every K steps parameters ring-gossip (Eq. 16) instead of
+all-reducing. Compares the loss trajectory against classic all-reduce data
+parallelism on the same token stream.
+
+NOTE: this script re-execs itself with XLA_FLAGS to create 4 host devices.
+"""
+import argparse
+import os
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.execv(sys.executable, [sys.executable] + sys.argv)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.data.lm_data import token_batches
+from repro.optim.adam import Adam
+from repro.train.step import init_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--gossip-every", type=int, default=4)
+    ap.add_argument("--variant", default="full", choices=("full", "smoke"))
+    args = ap.parse_args()
+
+    cfg = configs.get_config("xlstm-125m", args.variant,
+                             scan_layers=False, remat=False)
+    pods = len(jax.devices())
+    mesh = jax.make_mesh((pods,), ("pod",))
+    opt = Adam(lr=3e-4, clip_norm=1.0)
+
+    n_params = None
+    results = {}
+    for mode in ("allreduce", "spread"):
+        state = init_state(jax.random.key(0), cfg, opt)
+        if n_params is None:
+            n_params = sum(int(np.prod(p.shape))
+                           for p in jax.tree.leaves(state.params))
+            print(f"[example] xlstm-125m ({args.variant}): "
+                  f"{n_params/1e6:.1f}M params on {pods} simulated pods")
+        inner = make_train_step(cfg, opt, aggregation=mode,
+                                gossip_every=args.gossip_every,
+                                pod_axis="pod" if mode == "spread" else None)
+
+        if mode == "spread":
+            def per_pod(state_blk, batch_blk):
+                st = jax.tree.map(lambda t: t[0], state_blk)
+                st, metrics = inner(st, batch_blk)
+                return jax.tree.map(lambda t: t[None], st), metrics
+            step = jax.jit(shard_map(per_pod, mesh=mesh,
+                                     in_specs=(P("pod"), P("pod")),
+                                     out_specs=(P("pod"), P("pod")),
+                                     check_rep=False))
+            state = jax.tree.map(
+                lambda t: jnp.broadcast_to(t, (pods,) + t.shape).copy(), state)
+        else:
+            def allreduce_pod(state_blk, batch_blk):
+                from repro.core import gossip
+                st = jax.tree.map(lambda t: t[0], state_blk)
+                st, metrics = inner(st, batch_blk)
+                st = st._replace(params=gossip.all_average(st.params, "pod"))
+                return jax.tree.map(lambda t: t[None], st), metrics
+            step = jax.jit(shard_map(allreduce_pod, mesh=mesh,
+                                     in_specs=(P("pod"), P("pod")),
+                                     out_specs=(P("pod"), P("pod")),
+                                     check_rep=False))
+            state = jax.tree.map(
+                lambda t: jnp.broadcast_to(t, (pods,) + t.shape).copy(), state)
+
+        data = token_batches(cfg, batch=args.batch, seq_len=args.seq, seed=42)
+        losses = []
+        for i in range(args.steps):
+            batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+            state, metrics = step(state, batch)
+            losses.append(float(jnp.mean(metrics["loss"])))
+            if i % 20 == 0 or i == args.steps - 1:
+                print(f"[{mode:9s}] step {i:4d} loss {losses[-1]:.4f}")
+        results[mode] = losses
+
+    a, s = results["allreduce"][-10:], results["spread"][-10:]
+    print(f"\nfinal-10 mean loss: allreduce={np.mean(a):.4f} "
+          f"spread={np.mean(s):.4f}")
+    print("gossip exchanges 2 neighbor copies every "
+          f"{args.gossip_every} steps vs a full all-reduce every step: "
+          f"{2 / args.gossip_every / (2 * (pods - 1) / pods):.2f}x relative "
+          "cross-pod traffic (see EXPERIMENTS.md §Perf)")
+
+
+if __name__ == "__main__":
+    main()

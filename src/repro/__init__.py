@@ -1,0 +1,3 @@
+"""SpreadFGL on JAX/TPU — edge-client collaborative federated graph learning
+with adaptive neighbor generation (Zhong et al., 2024), plus the paper's
+edge-layer aggregation lifted to multi-pod TPU training. See DESIGN.md."""

@@ -1,0 +1,2 @@
+"""Pytree <-> npz checkpointing."""
+from repro.checkpoint.io import restore, save  # noqa: F401

@@ -1,0 +1,57 @@
+"""Pytree checkpointing to .npz (no orbax offline).
+
+Flattens a pytree with '/'-joined key paths; restores into the same structure.
+Handles dataclass/NamedTuple nodes via jax.tree flattening against a template.
+"""
+from __future__ import annotations
+
+import pathlib
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves_with_paths:
+        key = "/".join(_path_str(p) for p in path) or "_root"
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    if hasattr(entry, "name"):
+        return str(entry.name)
+    return str(entry)
+
+
+def save(path: str | pathlib.Path, tree: PyTree) -> None:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def restore(path: str | pathlib.Path, template: PyTree) -> PyTree:
+    """Load arrays back into the structure of ``template``."""
+    with np.load(pathlib.Path(path), allow_pickle=False) as data:
+        flat = dict(data)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path_entries, leaf in paths:
+        key = "/".join(_path_str(p) for p in path_entries) or "_root"
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {np.shape(leaf)}")
+        leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

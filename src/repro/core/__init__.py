@@ -1,0 +1,4 @@
+"""The paper's contribution: FedGL/SpreadFGL training engines, the adaptive
+graph imputation generator + versatile assessor + negative sampling
+(Sec. III), graph fixing, comparison baselines, and the Eq. 16 gossip
+aggregation both at the edge layer and on the TPU pod axis."""

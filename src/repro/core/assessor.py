@@ -1,0 +1,102 @@
+"""Versatile assessor + negative sampling (Sec. III-C/D, Eq. 11-14).
+
+The assessor is a GAN-style discriminator: an MLP {c, 128, 16, 1} with ReLU
+hidden layers and a sigmoid head that scores a softmax-space node vector. It is
+trained to score the real globally-shared information H high and the
+autoencoder reconstruction H̄ low (Eq. 13); the autoencoder is trained
+adversarially to push its reconstruction's score up, plus a masked L2
+reconstruction term on the negative-sampled attributes (Eq. 14).
+
+Negative sampling: e_u[i] = 1 iff h_u[i] > theta (theta = 1/c). Attributes with
+e=1 enter the adversarial terms, attributes with e=0 are zero-regularized via
+the reconstruction term — both nets "spotlight" discriminative class mass.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gnn import _glorot
+
+PyTree = Dict
+_EPS = 1e-6
+
+
+def init_assessor(key, c: int, hidden: Sequence[int] = (128, 16)) -> PyTree:
+    dims = (c,) + tuple(hidden) + (1,)
+    layers = []
+    for i, k in enumerate(jax.random.split(key, len(dims) - 1)):
+        layers.append({"w": _glorot(k, (dims[i], dims[i + 1])),
+                       "b": jnp.zeros((dims[i + 1],))})
+    return {"layers": layers}
+
+
+def apply_assessor(params: PyTree, h: jnp.ndarray) -> jnp.ndarray:
+    """Score in (0,1) per node: [n, c] -> [n]."""
+    z = h
+    n_layers = len(params["layers"])
+    for li, layer in enumerate(params["layers"]):
+        z = z @ layer["w"] + layer["b"]
+        if li < n_layers - 1:
+            z = jax.nn.relu(z)
+    return jax.nn.sigmoid(z[..., 0])
+
+
+def negative_mask(h_real: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """e_u (Eq. 13): 1 where the attribute exceeds the threshold theta."""
+    return (h_real > theta).astype(h_real.dtype)
+
+
+def assessor_loss(params_as: PyTree, h_real: jnp.ndarray, h_fake: jnp.ndarray,
+                  e: jnp.ndarray, node_mask: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (13). Minimized in the assessor's parameters.
+
+    L_AS = mean_u [ log(1 - Assor(h_u ⊙ e_u)) + log(Assor(h̄_u ⊙ e_u)) ]
+    (minimizing drives Assor(real)→1 and Assor(fake)→0).
+    """
+    s_real = apply_assessor(params_as, h_real * e)
+    s_fake = apply_assessor(params_as, h_fake * e)
+    per_node = jnp.log1p(-s_real + _EPS) + jnp.log(s_fake + _EPS)
+    denom = jnp.maximum(jnp.sum(node_mask), 1.0)
+    return jnp.sum(per_node * node_mask) / denom
+
+
+def autoencoder_loss(params_ae: PyTree, params_as: PyTree, s_noise: jnp.ndarray,
+                     h_real: jnp.ndarray, e: jnp.ndarray,
+                     node_mask: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (14). Minimized in the autoencoder's parameters (assessor frozen).
+
+    L_AE = mean_u [ log(1 - Assor(h̄_u ⊙ e_u))
+                    + || h_u ⊙ (1-e_u) - h̄_u ⊙ (1-e_u) ||² ]
+    """
+    from repro.core import imputation
+    _, h_fake = imputation.reconstruct(params_ae, s_noise)
+    s_fake = apply_assessor(params_as, h_fake * e)
+    adv = jnp.log1p(-s_fake + _EPS)
+    neg = (h_real - h_fake) * (1.0 - e)
+    rec = jnp.sum(neg * neg, axis=-1)
+    per_node = adv + rec
+    denom = jnp.maximum(jnp.sum(node_mask), 1.0)
+    return jnp.sum(per_node * node_mask) / denom
+
+
+def autoencoder_loss_plain(params_ae: PyTree, params_as: PyTree, s_noise: jnp.ndarray,
+                           node_mask: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (11): ablation variant WITHOUT negative sampling (Fig. 7 'w/o NS')."""
+    from repro.core import imputation
+    _, h_fake = imputation.reconstruct(params_ae, s_noise)
+    s_fake = apply_assessor(params_as, h_fake)
+    denom = jnp.maximum(jnp.sum(node_mask), 1.0)
+    return jnp.sum(jnp.log1p(-s_fake + _EPS) * node_mask) / denom
+
+
+def assessor_loss_plain(params_as: PyTree, h_real: jnp.ndarray, h_fake: jnp.ndarray,
+                        node_mask: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (12): ablation variant WITHOUT negative sampling."""
+    s_real = apply_assessor(params_as, h_real)
+    s_fake = apply_assessor(params_as, h_fake)
+    per_node = jnp.log1p(-s_real + _EPS) + jnp.log(s_fake + _EPS)
+    denom = jnp.maximum(jnp.sum(node_mask), 1.0)
+    return jnp.sum(per_node * node_mask) / denom

@@ -1,0 +1,311 @@
+"""FedGL / SpreadFGL training engine (Algorithm 1).
+
+One engine covers both frameworks: ``num_edge_servers == 1`` with a trivial
+adjacency is FedGL (Sec. III-B); ``num_edge_servers > 1`` with a ring adjacency
+and the Eq. 15 trace regularizer + Eq. 16 neighbor aggregation is SpreadFGL
+(Sec. III-E).
+
+Layout: client classifiers are stacked on a leading [M] axis; clients are
+grouped contiguously per server ([N, M_per] reshape). Everything jits; the
+outer edge-client communication loop is a Python loop (it mutates graph
+structure on imputation rounds).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import assessor as assessor_lib
+from repro.core import gnn, imputation, patcher
+from repro.core.types import ClientBatch, FGLConfig
+from repro.optim.adam import Adam
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class FGLState:
+    params: PyTree        # [M, ...] stacked client classifiers
+    opt_state: Any
+    ae_params: List[PyTree]    # per server (python list, N static)
+    ae_opt: List[Any]
+    as_params: List[PyTree]
+    as_opt: List[Any]
+    batch: ClientBatch
+    key: jax.Array
+    round: int = 0
+
+
+def _cross_entropy(logits: jnp.ndarray, y: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (7): masked CE; logits [n, c], y [n] with -1 on unlabeled."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    safe_y = jnp.maximum(y, 0)
+    picked = jnp.take_along_axis(logp, safe_y[:, None], axis=-1)[:, 0]
+    mask = mask * (y >= 0)
+    return -jnp.sum(picked * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _trace_reg(params: PyTree) -> jnp.ndarray:
+    """Eq. (15): Tr(W_L W_Lᵀ) = ||W_L||_F² on the last GNN layer's weights."""
+    last = params["layers"][-1]
+    return sum(jnp.sum(jnp.square(w)) for k, w in last.items() if k != "b")
+
+
+class FGLTrainer:
+    """Drives Algorithm 1 for a fixed client batch."""
+
+    def __init__(self, cfg: FGLConfig, batch: ClientBatch, server_adjacency: np.ndarray,
+                 server_of_client: np.ndarray, *, aggregate_impl: str = "reference",
+                 use_negative_sampling: bool = True, use_assessor: bool = True,
+                 use_imputation: bool = True):
+        self.cfg = cfg
+        self.num_classes = batch.num_classes
+        self.n_servers = int(server_adjacency.shape[0])
+        self.m = batch.num_clients
+        if self.m % self.n_servers:
+            raise ValueError("clients must split evenly across servers")
+        self.m_per = self.m // self.n_servers
+        expected = np.repeat(np.arange(self.n_servers), self.m_per)
+        if not np.array_equal(np.asarray(server_of_client), expected):
+            raise ValueError("clients must be grouped contiguously per server")
+        self.adj_servers = jnp.asarray(server_adjacency, jnp.float32)
+        self.feature_dim = batch.x.shape[-1]
+        self.aggregate_impl = aggregate_impl
+        self.use_ns = use_negative_sampling
+        self.use_assessor = use_assessor
+        self.use_imputation = use_imputation
+        self.opt = Adam(lr=cfg.lr_classifier)
+        self.gen_opt = Adam(lr=cfg.lr_generator)
+        self.is_spread = self.n_servers > 1
+        self._local_fn = jax.jit(self._local_rounds)
+        self._agg_fn = jax.jit(self._aggregate_broadcast)
+        self._impute_fn = jax.jit(self._imputation_round)
+        self._eval_fn = jax.jit(self._evaluate)
+
+    # -- initialization ------------------------------------------------------
+
+    def init(self, key: jax.Array, batch: ClientBatch) -> FGLState:
+        cfg = self.cfg
+        dims = [self.feature_dim] + [cfg.hidden_dim] * (cfg.num_layers - 1) + [self.num_classes]
+        k_cls, k_ae, k_as, k_run = jax.random.split(key, 4)
+        # Algorithm 1 line 3: all clients start from the server weights W_j.
+        base = gnn.init_classifier(k_cls, cfg.gnn_kind, dims)
+        params = jax.tree.map(lambda p: jnp.broadcast_to(p, (self.m,) + p.shape).copy(), base)
+        ae_params, ae_opt, as_params, as_opt = [], [], [], []
+        for j in range(self.n_servers):
+            kj = jax.random.fold_in(k_ae, j)
+            ae = imputation.init_autoencoder(kj, self.num_classes, self.feature_dim,
+                                             cfg.ae_hidden)
+            asr = assessor_lib.init_assessor(jax.random.fold_in(k_as, j),
+                                             self.num_classes, cfg.assessor_hidden)
+            ae_params.append(ae)
+            ae_opt.append(self.gen_opt.init(ae))
+            as_params.append(asr)
+            as_opt.append(self.gen_opt.init(asr))
+        batch = jax.tree.map(jnp.asarray, batch)
+        return FGLState(params=params, opt_state=self.opt.init(params),
+                        ae_params=ae_params, ae_opt=ae_opt,
+                        as_params=as_params, as_opt=as_opt,
+                        batch=batch, key=k_run)
+
+    # -- local training (Algorithm 1 lines 8-9) ------------------------------
+
+    def _client_loss(self, params_m: PyTree, batch: ClientBatch) -> jnp.ndarray:
+        def one(params, x, adj, y, node_mask, train_mask):
+            logits = gnn.apply_classifier(params, self.cfg.gnn_kind, x, adj, node_mask,
+                                          impl=self.aggregate_impl)
+            loss = _cross_entropy(logits, y, train_mask)
+            if self.is_spread and self.cfg.trace_reg > 0:
+                loss = loss + self.cfg.trace_reg * _trace_reg(params)
+            return loss
+        losses = jax.vmap(one)(params_m, batch.x, batch.adj, batch.y,
+                               batch.node_mask, batch.train_mask)
+        return jnp.sum(losses)  # sum => per-client grads stay independent
+
+    def _local_rounds(self, params, opt_state, batch: ClientBatch):
+        def step(carry, _):
+            params, opt_state = carry
+            grads = jax.grad(self._client_loss)(params, batch)
+            params, opt_state = self.opt.update(grads, opt_state, params)
+            return (params, opt_state), ()
+        (params, opt_state), _ = jax.lax.scan(step, (params, opt_state), None,
+                                              length=self.cfg.local_rounds)
+        return params, opt_state
+
+    # -- aggregation (FedAvg / Eq. 16) ----------------------------------------
+
+    def _aggregate_broadcast(self, params: PyTree) -> PyTree:
+        n, mp = self.n_servers, self.m_per
+
+        def agg(leaf):
+            grouped = leaf.reshape((n, mp) + leaf.shape[1:])
+            client_sum = jnp.sum(grouped, axis=1)             # [N, ...]
+            if self.is_spread:
+                # Eq. 16: W_j = sum_r a_rj * sum_i W_(r,i) / sum_r a_rj M_r
+                weights = self.adj_servers  # a_rj, rows r cols j
+                num = jnp.einsum("rj,r...->j...", weights, client_sum)
+                den = jnp.sum(weights, axis=0) * mp           # [N]
+                w = num / den.reshape((n,) + (1,) * (leaf.ndim - 1))
+            else:
+                w = client_sum / mp
+            return jnp.repeat(w, mp, axis=0)                   # broadcast to clients
+        return jax.tree.map(agg, params)
+
+    # -- imputation + graph fixing (Algorithm 1 lines 11-24) ------------------
+
+    def _embeddings(self, params, batch: ClientBatch) -> jnp.ndarray:
+        def one(p, x, adj, mask):
+            logits = gnn.apply_classifier(p, self.cfg.gnn_kind, x, adj, mask,
+                                          impl=self.aggregate_impl)
+            return jax.nn.softmax(logits, axis=-1)
+        return jax.vmap(one)(params, batch.x, batch.adj, batch.node_mask)
+
+    def _train_generator(self, key, ae, ae_opt, asr, as_opt, h_real, flat_mask):
+        """Alternating AE / assessor training (Algorithm 1 lines 16-23).
+
+        The noise matrix S is sampled ONCE per imputation round and held fixed
+        across AE/assessor iterations, so that row v of S is bound to node v:
+        the masked reconstruction term of Eq. (14) then makes h(f(S))_v track
+        h_v and the encoder output X̅_v = f(S)_v is a node-specific imputed
+        feature (Sec. III-C: "X̅ = f(S) indicates the potential features").
+        Returns (ae, ae_opt, asr, as_opt, s_noise).
+        """
+        cfg = self.cfg
+        theta = cfg.theta(self.num_classes)
+        n = h_real.shape[0]
+        e = (assessor_lib.negative_mask(h_real, theta) if self.use_ns
+             else jnp.ones_like(h_real))
+        key, ks = jax.random.split(key)
+        s_noise = imputation.sample_noise(ks, n, self.num_classes)
+
+        def ae_step(carry, k):
+            ae, ae_opt = carry
+            s = s_noise
+            if self.use_assessor:
+                loss_fn = lambda p: assessor_lib.autoencoder_loss(
+                    p, asr_current[0], s, h_real, e, flat_mask)
+            else:
+                # w/o assessor: plain masked reconstruction of H (Fig. 7 ablation).
+                def loss_fn(p):
+                    _, h_fake = imputation.reconstruct(p, s)
+                    diff = (h_real - h_fake)
+                    return jnp.sum(jnp.sum(diff * diff, -1) * flat_mask) / jnp.maximum(
+                        jnp.sum(flat_mask), 1.0)
+            grads = jax.grad(loss_fn)(ae)
+            ae, ae_opt = self.gen_opt.update(grads, ae_opt, ae)
+            return (ae, ae_opt), ()
+
+        def as_step(carry, k):
+            asr, as_opt = carry
+            _, h_fake = imputation.reconstruct(ae_current[0], s_noise)
+            if self.use_ns:
+                loss_fn = lambda p: assessor_lib.assessor_loss(p, h_real, h_fake, e, flat_mask)
+            else:
+                loss_fn = lambda p: assessor_lib.assessor_loss_plain(p, h_real, h_fake, flat_mask)
+            grads = jax.grad(loss_fn)(asr)
+            asr, as_opt = self.gen_opt.update(grads, as_opt, asr)
+            return (asr, as_opt), ()
+
+        for _ in range(cfg.ae_outer_iters):
+            key, k1, k2 = jax.random.split(key, 3)
+            asr_current = (asr, as_opt)
+            (ae, ae_opt), _ = jax.lax.scan(ae_step, (ae, ae_opt),
+                                           jax.random.split(k1, cfg.ae_iters))
+            ae_current = (ae, ae_opt)
+            if self.use_assessor:
+                (asr, as_opt), _ = jax.lax.scan(as_step, (asr, as_opt),
+                                                jax.random.split(k2, cfg.assessor_iters))
+        return ae, ae_opt, asr, as_opt, s_noise
+
+    def _imputation_round(self, state_tuple):
+        """Per-server: fuse -> similarity top-k -> AE/assessor -> fix graphs."""
+        (params, batch, ae_params, ae_opt, as_params, as_opt, key) = state_tuple
+        cfg = self.cfg
+        emb = self._embeddings(params, batch)              # [M, n_pad, c]
+        n_pad = batch.x.shape[1]
+        new_ae, new_ae_opt, new_as, new_as_opt = [], [], [], []
+        all_scores, all_idx, all_xbar = [], [], []
+        for j in range(self.n_servers):
+            sl = slice(j * self.m_per, (j + 1) * self.m_per)
+            h_flat, flat_mask = imputation.fuse_embeddings(emb[sl], batch.node_mask[sl])
+            client_ids = imputation.client_of_flat(self.m_per, n_pad)
+            key, kj = jax.random.split(key)
+            ae, aeo, asr, aso, s_noise = self._train_generator(
+                kj, ae_params[j], ae_opt[j], as_params[j], as_opt[j], h_flat, flat_mask)
+            scores, idx = imputation.similarity_topk(
+                h_flat, flat_mask, client_ids, cfg.top_k_links)
+            x_bar = imputation.encode(ae, s_noise)          # X̅ = f(S), same S
+            new_ae.append(ae); new_ae_opt.append(aeo)
+            new_as.append(asr); new_as_opt.append(aso)
+            all_scores.append(scores); all_idx.append(idx); all_xbar.append(x_bar)
+
+        # Stitch per-server results back to the global client axis. Link indices
+        # are server-local flats; offset them into the global flat space.
+        scores = jnp.concatenate(all_scores, axis=0)
+        idx_parts = []
+        for j, idx in enumerate(all_idx):
+            offset = j * self.m_per * n_pad
+            idx_parts.append(jnp.where(idx >= 0, idx + offset, -1))
+        idx = jnp.concatenate(idx_parts, axis=0)
+        x_bar = jnp.concatenate(all_xbar, axis=0)
+        batch = patcher.fix_graphs(batch, scores, idx, x_bar)
+        return batch, new_ae, new_ae_opt, new_as, new_as_opt, key
+
+    # -- evaluation ------------------------------------------------------------
+
+    def _evaluate(self, params, batch: ClientBatch):
+        def one(p, x, adj, y, node_mask, test_mask):
+            logits = gnn.apply_classifier(p, self.cfg.gnn_kind, x, adj, node_mask,
+                                          impl=self.aggregate_impl)
+            pred = jnp.argmax(logits, axis=-1)
+            mask = test_mask * (y >= 0)
+            correct = jnp.sum((pred == y) * mask)
+            # Macro-F1 pieces per class.
+            c = self.num_classes
+            onehot_p = jax.nn.one_hot(pred, c) * mask[:, None]
+            onehot_y = jax.nn.one_hot(jnp.maximum(y, 0), c) * mask[:, None]
+            tp = jnp.sum(onehot_p * onehot_y, axis=0)
+            fp = jnp.sum(onehot_p * (1 - onehot_y), axis=0)
+            fn = jnp.sum((1 - onehot_p) * onehot_y, axis=0)
+            return correct, jnp.sum(mask), tp, fp, fn
+        correct, total, tp, fp, fn = jax.vmap(one)(
+            params, batch.x, batch.adj, batch.y, batch.node_mask, batch.test_mask)
+        acc = jnp.sum(correct) / jnp.maximum(jnp.sum(total), 1.0)
+        tp, fp, fn = jnp.sum(tp, 0), jnp.sum(fp, 0), jnp.sum(fn, 0)
+        precision = tp / jnp.maximum(tp + fp, 1e-9)
+        recall = tp / jnp.maximum(tp + fn, 1e-9)
+        f1 = 2 * precision * recall / jnp.maximum(precision + recall, 1e-9)
+        seen = (tp + fn) > 0
+        macro_f1 = jnp.sum(jnp.where(seen, f1, 0.0)) / jnp.maximum(jnp.sum(seen), 1.0)
+        return acc, macro_f1
+
+    # -- outer loop (Algorithm 1) ----------------------------------------------
+
+    def fit(self, key: jax.Array, batch: ClientBatch, *, rounds: Optional[int] = None
+            ) -> Tuple[FGLState, Dict[str, list]]:
+        state = self.init(key, batch)
+        history: Dict[str, list] = {"round": [], "loss": [], "acc": [], "f1": []}
+        rounds = rounds if rounds is not None else self.cfg.global_rounds
+        for t_g in range(rounds):
+            params, opt_state = self._local_fn(state.params, state.opt_state, state.batch)
+            state.params, state.opt_state = params, opt_state
+            if self.use_imputation and (t_g % self.cfg.imputation_interval == 0):
+                (batch2, ae, aeo, asr, aso, key2) = self._impute_fn(
+                    (state.params, state.batch, state.ae_params, state.ae_opt,
+                     state.as_params, state.as_opt, state.key))
+                state.batch, state.ae_params, state.ae_opt = batch2, ae, aeo
+                state.as_params, state.as_opt, state.key = asr, aso, key2
+            state.params = self._agg_fn(state.params)
+            loss = float(self._client_loss(state.params, state.batch)) / self.m
+            acc, f1 = self._eval_fn(state.params, state.batch)
+            history["round"].append(t_g)
+            history["loss"].append(loss)
+            history["acc"].append(float(acc))
+            history["f1"].append(float(f1))
+            state.round = t_g + 1
+        return state, history

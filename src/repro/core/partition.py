@@ -1,0 +1,158 @@
+"""Graph partitioning into disjoint client subgraphs (Sec. III-A).
+
+The paper uses Louvain to split each benchmark graph into M client subgraphs
+with *no shared nodes and no cross-client links* (the deleted links are the
+missing cross-subgraph links the imputation generator must recover). Offline we
+use deterministic label propagation as the community detector, then balance the
+communities into M equal-size clients.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.types import ClientBatch, Graph
+
+
+def label_propagation_communities(graph: Graph, *, iters: int = 20, seed: int = 0) -> np.ndarray:
+    """Deterministic synchronous label propagation; returns [n] community ids."""
+    n = graph.num_nodes
+    rng = np.random.default_rng(seed)
+    labels = np.arange(n)
+    nbrs: List[List[int]] = [[] for _ in range(n)]
+    for u, v in zip(np.asarray(graph.senders), np.asarray(graph.receivers)):
+        nbrs[int(u)].append(int(v))
+        nbrs[int(v)].append(int(u))
+    order = rng.permutation(n)
+    for _ in range(iters):
+        changed = 0
+        for u in order:
+            if not nbrs[u]:
+                continue
+            counts = np.bincount(labels[nbrs[u]])
+            best = int(np.argmax(counts))
+            if labels[u] != best:
+                labels[u] = best
+                changed += 1
+        if changed == 0:
+            break
+    # Compact ids.
+    _, labels = np.unique(labels, return_inverse=True)
+    return labels.astype(np.int32)
+
+
+def balanced_assignment(communities: np.ndarray, num_clients: int, *, seed: int = 0) -> np.ndarray:
+    """Pack communities into ``num_clients`` near-equal groups (greedy bin pack)."""
+    rng = np.random.default_rng(seed)
+    comm_ids, counts = np.unique(communities, return_counts=True)
+    order = np.argsort(-counts)  # largest community first
+    loads = np.zeros(num_clients, dtype=np.int64)
+    comm_to_client = {}
+    for idx in order:
+        cid = int(comm_ids[idx])
+        target = int(np.argmin(loads))
+        comm_to_client[cid] = target
+        loads[target] += counts[idx]
+    assign = np.array([comm_to_client[int(c)] for c in communities], dtype=np.int32)
+    # Rebalance: move random nodes from overloaded to underloaded clients so that
+    # every client has at least one node and sizes stay within 2x of mean.
+    n = len(assign)
+    mean = n / num_clients
+    for c in range(num_clients):
+        while np.sum(assign == c) > 2 * mean:
+            donor = np.where(assign == c)[0]
+            tgt = int(np.argmin(np.bincount(assign, minlength=num_clients)))
+            assign[rng.choice(donor)] = tgt
+    for c in range(num_clients):
+        if not np.any(assign == c):
+            big = int(np.argmax(np.bincount(assign, minlength=num_clients)))
+            movable = np.where(assign == big)[0]
+            assign[rng.choice(movable)] = c
+    return assign
+
+
+def count_missing_links(graph: Graph, assign: np.ndarray) -> int:
+    """|ΔE|: links deleted because their endpoints land on different clients."""
+    s = np.asarray(graph.senders)
+    r = np.asarray(graph.receivers)
+    return int(np.sum(assign[s] != assign[r]))
+
+
+def partition_graph(graph: Graph, num_clients: int, *, label_ratio: float = 0.3,
+                    test_ratio: float = 0.2, aug_max: int = 16,
+                    seed: int = 0) -> Tuple[ClientBatch, np.ndarray]:
+    """Split ``graph`` into M disjoint padded client subgraphs.
+
+    Cross-client edges are DELETED (they are the missing links of Sec. III-A);
+    their count is reported by :func:`count_missing_links`.
+
+    Returns (client_batch, assign).
+    """
+    rng = np.random.default_rng(seed)
+    comm = label_propagation_communities(graph, seed=seed)
+    assign = balanced_assignment(comm, num_clients, seed=seed)
+
+    sizes = np.bincount(assign, minlength=num_clients)
+    n_local_max = int(sizes.max())
+    n_pad = n_local_max + aug_max
+    d = graph.feature_dim
+    m = num_clients
+
+    x = np.zeros((m, n_pad, d), dtype=np.float32)
+    adj = np.zeros((m, n_pad, n_pad), dtype=np.float32)
+    y = -np.ones((m, n_pad), dtype=np.int32)
+    node_mask = np.zeros((m, n_pad), dtype=np.float32)
+    train_mask = np.zeros((m, n_pad), dtype=np.float32)
+    test_mask = np.zeros((m, n_pad), dtype=np.float32)
+    global_id = -np.ones((m, n_pad), dtype=np.int32)
+
+    s = np.asarray(graph.senders)
+    r = np.asarray(graph.receivers)
+    gx = np.asarray(graph.x)
+    gy = np.asarray(graph.y)
+
+    for ci in range(m):
+        nodes = np.where(assign == ci)[0]
+        k = len(nodes)
+        local_index = {int(g): i for i, g in enumerate(nodes)}
+        x[ci, :k] = gx[nodes]
+        y[ci, :k] = gy[nodes]
+        node_mask[ci, :k] = 1.0
+        global_id[ci, :k] = nodes
+        # Intra-client edges only.
+        keep = (assign[s] == ci) & (assign[r] == ci)
+        for u, v in zip(s[keep], r[keep]):
+            iu, iv = local_index[int(u)], local_index[int(v)]
+            adj[ci, iu, iv] = 1.0
+            adj[ci, iv, iu] = 1.0
+        # Label split: label_ratio train, test_ratio test (disjoint).
+        perm = rng.permutation(k)
+        n_tr = max(1, int(round(label_ratio * k)))
+        n_te = max(1, int(round(test_ratio * k)))
+        train_mask[ci, perm[:n_tr]] = 1.0
+        test_mask[ci, perm[n_tr:n_tr + n_te]] = 1.0
+
+    batch = ClientBatch(x=x, adj=adj, y=y, node_mask=node_mask,
+                        train_mask=train_mask, test_mask=test_mask,
+                        global_id=global_id, num_classes=graph.num_classes,
+                        aug_max=aug_max)
+    return batch, assign
+
+
+def group_clients_by_server(num_clients: int, num_servers: int) -> np.ndarray:
+    """[M] -> server id; contiguous balanced grouping (clients talk to nearest server)."""
+    return (np.arange(num_clients) * num_servers // num_clients).astype(np.int32)
+
+
+def ring_adjacency(num_servers: int, *, self_loop: bool = True) -> np.ndarray:
+    """Edge-layer topology A of Sec. III-E (paper testbed uses a ring)."""
+    a = np.zeros((num_servers, num_servers), dtype=np.float32)
+    if num_servers == 1:
+        return np.ones((1, 1), dtype=np.float32)
+    for j in range(num_servers):
+        a[j, (j - 1) % num_servers] = 1.0
+        a[j, (j + 1) % num_servers] = 1.0
+        if self_loop:
+            a[j, j] = 1.0
+    return a

@@ -1,0 +1,42 @@
+"""SpreadFGL / FedGL facades (Sec. III-B and III-E).
+
+Thin constructors over the shared :class:`~repro.core.fedgl.FGLTrainer` engine,
+wired exactly as the paper's experiment section configures them:
+
+- ``make_fedgl``: one edge server covering all clients, FedAvg aggregation.
+- ``make_spreadfgl``: N edge servers (3 in the paper's testbed) on a ring
+  topology, Eq. 15 trace regularizer, Eq. 16 neighbor aggregation.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.fedgl import FGLTrainer
+from repro.core.partition import group_clients_by_server, ring_adjacency
+from repro.core.types import ClientBatch, FGLConfig
+
+
+def make_fedgl(cfg: FGLConfig, batch: ClientBatch, **kw) -> FGLTrainer:
+    m = batch.num_clients
+    adj = np.ones((1, 1), dtype=np.float32)
+    server_of_client = np.zeros(m, dtype=np.int32)
+    cfg = _with_servers(cfg, 1, m)
+    return FGLTrainer(cfg, batch, adj, server_of_client, **kw)
+
+
+def make_spreadfgl(cfg: FGLConfig, batch: ClientBatch, *, num_servers: int = 3,
+                   adjacency: Optional[np.ndarray] = None, **kw) -> FGLTrainer:
+    m = batch.num_clients
+    if m % num_servers:
+        raise ValueError(f"M={m} must divide across N={num_servers} servers")
+    adj = adjacency if adjacency is not None else ring_adjacency(num_servers)
+    server_of_client = group_clients_by_server(m, num_servers)
+    cfg = _with_servers(cfg, num_servers, m // num_servers)
+    return FGLTrainer(cfg, batch, adj, server_of_client, **kw)
+
+
+def _with_servers(cfg: FGLConfig, n: int, m_per: int) -> FGLConfig:
+    import dataclasses
+    return dataclasses.replace(cfg, num_edge_servers=n, clients_per_server=m_per)

@@ -1,0 +1,2 @@
+"""Data substrate: synthetic graph datasets (Table I stand-ins) and the
+LM token pipeline + modality stubs (DESIGN.md §8)."""

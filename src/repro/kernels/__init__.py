@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+- flash_attention: blocked online-softmax attention (train/prefill).
+- sage_aggregate: fused normalized neighbor aggregation (GraphSAGE, Eq. 3).
+- sim_topk.sim_block: gram-similarity slabs for the imputation generator.
+
+``ops`` holds the jitted public wrappers; ``ref`` the pure-jnp oracles.
+Import ``repro.kernels.ops`` lazily from model code so that merely importing
+the models package never pulls in pallas.
+"""

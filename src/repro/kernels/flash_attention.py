@@ -1,0 +1,114 @@
+"""Flash attention Pallas TPU kernel (train/prefill hot spot).
+
+Online-softmax blocked attention (Dao et al. adapted to TPU): grid is
+(batch*heads, q_blocks, kv_blocks) with the kv dimension iterated innermost so
+the running max/denominator/accumulator live in VMEM scratch across kv steps.
+Block shapes default to 128×128 — MXU-aligned (128 lanes) and small enough that
+q, k, v, and the f32 accumulator tiles fit comfortably in ~16 MB VMEM:
+   q(128×D) + k(128×D) + v(128×D) + acc(128×D) f32 ≈ 4·128·128·4 B = 256 KB.
+
+Supports causal masking and sliding-window attention (Mixtral/Gemma-3 local
+layers). GQA is handled in ops.py by broadcasting kv heads before the call.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scratch, l_scratch, acc_scratch,
+                  *, scale: float, causal: bool,
+                  window: Optional[int], block_q: int, block_kv: int,
+                  seq_kv: int, seq_q: int):
+    """One (q_block, kv_block) step of online softmax."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    q = q_ref[0].astype(jnp.float32)            # [block_q, d]
+    k = k_ref[0].astype(jnp.float32)            # [block_kv, d]
+    v = v_ref[0].astype(jnp.float32)            # [block_kv, d]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    # Positional mask. Query positions are aligned to the END of the kv axis
+    # (prefill: seq_q == seq_kv; decode: seq_q << seq_kv attending to cache).
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) \
+        + (seq_kv - seq_q)
+    kpos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones(s.shape, dtype=jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scratch[...]                      # [block_q, 1]
+    l_prev = l_scratch[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                       # [block_q, block_kv]
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scratch[...] = acc_scratch[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scratch[...] = m_new
+    l_scratch[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scratch[...]
+        # Fully-masked rows (l == 0) output zeros, matching the oracle.
+        o_ref[0, :, :] = jnp.where(
+            l > 0, acc_scratch[...] / jnp.maximum(l, 1e-30), 0.0
+        ).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None, block_q: int = 128,
+                    block_kv: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """q: [BH, Sq, D]; k, v: [BH, Skv, D] (heads pre-flattened/broadcast).
+
+    Sq and Skv must be multiples of the block sizes (ops.py pads).
+    """
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    assert sq % block_q == 0 and skv % block_kv == 0, (sq, skv, block_q, block_kv)
+    scale = float(scale) if scale is not None else 1.0 / (d ** 0.5)
+    grid = (bh, sq // block_q, skv // block_kv)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, seq_kv=skv, seq_q=sq)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

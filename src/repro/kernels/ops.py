@@ -1,0 +1,87 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Handle padding to block multiples, GQA head broadcast, and the
+interpret-mode switch (CPU validation). Models call these; they never touch
+pl.pallas_call directly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import sage_aggregate as _sage
+from repro.kernels import sim_topk as _sim
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int, value=0.0) -> jnp.ndarray:
+    size = x.shape[axis]
+    target = ((size + multiple - 1) // multiple) * multiple
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "interpret"))
+def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *, causal: bool = True,
+        window: Optional[int] = None, block_q: int = 128, block_kv: int = 128,
+        interpret: bool = False) -> jnp.ndarray:
+    """Multi-head flash attention.
+
+    q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D] with Hq % Hkv == 0 (GQA).
+    Returns [B, Hq, Sq, D].
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0
+    assert causal, "non-causal (cross) attention uses the jnp reference path"
+    if hkv != hq:  # broadcast kv heads across their GQA group
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+
+    block_q = min(block_q, max(8, sq))
+    qp = _pad_to(q.reshape(b * hq, sq, d), 1, block_q)
+    kp = _pad_to(k.reshape(b * hq, skv, d), 1, block_kv)
+    vp = _pad_to(v.reshape(b * hq, skv, d), 1, block_kv)
+    # Padding keys must never win the softmax: they sit at positions >= skv,
+    # beyond every query position, so the causal mask already removes them
+    # (ops are always causal here; window only tightens the mask).
+    out = _fa.flash_attention(qp, kp, vp, causal=causal, window=window,
+                              block_q=block_q, block_kv=block_kv,
+                              interpret=interpret)
+    return out[:, :sq].reshape(b, hq, sq, d)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def sage_aggregate(adj: jnp.ndarray, h: jnp.ndarray, *, block_m: int = 128,
+                   block_n: int = 128, block_k: int = 128,
+                   interpret: bool = False) -> jnp.ndarray:
+    """Row-normalized neighbor aggregation; accepts arbitrary [n,n]/[n,d]."""
+    n, d = h.shape
+    adj_p = _pad_to(_pad_to(adj, 0, block_m), 1, block_k)
+    h_p = _pad_to(_pad_to(h, 0, block_k), 1, block_n)
+    out = _sage.sage_aggregate(adj_p, h_p, block_m=block_m, block_n=block_n,
+                               block_k=block_k, interpret=interpret)
+    return out[:n, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def sim_block(rows: jnp.ndarray, h: jnp.ndarray, *, block_m: int = 128,
+              block_n: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """Gram slab rows @ hᵀ; accepts arbitrary [b,c]/[n,c]."""
+    b, n = rows.shape[0], h.shape[0]
+    block_m = min(block_m, max(8, b))
+    block_n = min(block_n, max(8, n))
+    rows_p = _pad_to(rows, 0, block_m)
+    h_p = _pad_to(h, 0, block_n)
+    out = _sim.sim_block(rows_p, h_p, block_m=block_m, block_n=block_n,
+                         interpret=interpret)
+    return out[:b, :n]

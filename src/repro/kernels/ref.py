@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors one kernel in this package; tests sweep shapes/dtypes and
+``assert_allclose`` kernel(interpret=True) against these.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None) -> jnp.ndarray:
+    """Masked softmax attention, f32 accumulation.
+
+    q: [B, H, Sq, D]; k, v: [B, H, Skv, D] (kv heads already broadcast to H).
+    ``window``: sliding-window size (keys within [i-window+1, i] attend).
+    """
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    sq, skv = q.shape[2], k.shape[2]
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)  # align ends (decode-friendly)
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows -> 0
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def sage_aggregate(adj: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Row-normalized neighbor mean: (A @ H) / max(rowsum(A), 1).
+
+    adj: [n, n] non-negative weights; h: [n, d]. f32 accumulation.
+    """
+    a = adj.astype(jnp.float32)
+    agg = a @ h.astype(jnp.float32)
+    deg = jnp.sum(a, axis=-1, keepdims=True)
+    return (agg / jnp.maximum(deg, 1.0)).astype(h.dtype)
+
+
+def sim_block(rows: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Gram-matrix row block of A̅ = H Hᵀ: rows @ hᵀ. rows: [b, c]; h: [n, c]."""
+    return (rows.astype(jnp.float32) @ h.astype(jnp.float32).T).astype(rows.dtype)

@@ -1,0 +1,47 @@
+"""Gram-similarity row-block Pallas kernel for the imputation generator.
+
+The graph imputation generator builds A̅ = H Hᵀ (Sec. III-C) over all nodes an
+edge server covers — O(n²c) and the FGL-side hot spot. The framework never
+materializes the full n×n gram: callers take row blocks and reduce them with
+top-k immediately (imputation.similarity_topk). This kernel produces one
+[block_rows × n] slab at a time.
+
+The contraction dim c (num classes ≤ 15 in the paper's datasets) is far below
+the 128-lane MXU width, so tiles are (block_m × c) @ (c × block_n): the cost is
+dominated by streaming H, which the column grid tiles through VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sim_kernel(rows_ref, h_ref, o_ref):
+    rows = rows_ref[...].astype(jnp.float32)    # [bm, c]
+    h = h_ref[...].astype(jnp.float32)          # [bn, c]
+    o_ref[...] = jax.lax.dot_general(
+        rows, h, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def sim_block(rows: jnp.ndarray, h: jnp.ndarray, *, block_m: int = 128,
+              block_n: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """rows: [b, c]; h: [n, c] -> [b, n] gram slab (padded by ops.py)."""
+    b, c = rows.shape
+    n, c2 = h.shape
+    assert c == c2
+    assert b % block_m == 0 and n % block_n == 0, (b, n, block_m, block_n)
+
+    grid = (b // block_m, n // block_n)
+    return pl.pallas_call(
+        _sim_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, c), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, c), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), rows.dtype),
+        interpret=interpret,
+    )(rows, h)

@@ -1,0 +1,197 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+The two lines above MUST run before any other import (jax locks the device
+count on first initialization); 512 placeholder host devices stand in for the
+2-pod production fleet.
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out benchmarks/results/dryrun
+
+Each run writes one JSON record (memory/cost analysis + collective bytes +
+roofline terms) consumed by EXPERIMENTS.md §Dry-run/§Roofline and by
+benchmarks/bench_roofline.py.
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Optional
+
+import jax
+
+from repro import configs
+from repro.configs import INPUT_SHAPES, InputShape, get_config, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.models import decoding
+from repro.models.config import ModelConfig
+from repro.optim.adam import Adam
+from repro.roofline import analysis, hw
+from repro.sharding import specs as S
+from repro.train.step import make_train_step
+
+
+def build_lowerable(cfg: ModelConfig, shape: InputShape, mesh, *,
+                    microbatch: int = 1):
+    """Returns (fn, example_args) ready for jax.jit(fn).lower(*args)."""
+    if shape.kind == "train":
+        opt = Adam(lr=1e-4, clip_norm=1.0)
+        step = make_train_step(cfg, opt, microbatch=microbatch)
+        state = S.state_specs(cfg, mesh, opt)
+        batch = S.batch_specs(cfg, shape, mesh)
+        return step, (state, batch)
+    if shape.kind == "prefill":
+        params = S.param_specs(cfg, mesh)
+        batch = S.batch_specs(cfg, shape, mesh)
+
+        def prefill_fn(params, tokens, memory=None):
+            return decoding.prefill(params, cfg, tokens, memory=memory)
+
+        args = (params, batch["tokens"])
+        if "memory" in batch:
+            return (lambda p, t, m: decoding.prefill(p, cfg, t, memory=m),
+                    (params, batch["tokens"], batch["memory"]))
+        return prefill_fn, args
+    # decode
+    params = S.param_specs(cfg, mesh)
+    cache = S.cache_specs(cfg, shape, mesh)
+    token = S.token_spec(shape, mesh)
+
+    def decode_fn(params, cache, token):
+        return decoding.decode_step(params, cfg, cache, token)
+
+    return decode_fn, (params, cache, token)
+
+
+def run_one(arch: str, shape_name: str, mesh_name: str, out_dir: Optional[str],
+            *, verbose: bool = True, microbatch: int = 1,
+            seq_parallel: bool = False, attention_impl: str = "",
+            no_scan: bool = False, tag: str = "") -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    overrides = {}
+    if seq_parallel:
+        overrides["seq_parallel_activations"] = True
+    if attention_impl:
+        overrides["attention_impl"] = attention_impl
+    if no_scan:
+        overrides["scan_layers"] = False
+    cfg = get_config(arch, "full", **overrides)
+    if not shape_applicable(cfg, shape):
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped",
+               "reason": "long_500k requires sub-quadratic attention "
+                         "(see DESIGN.md §4)"}
+        _write(rec, out_dir, tag)
+        return rec
+
+    multi = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = hw.CHIPS_MULTI_POD if multi else hw.CHIPS_SINGLE_POD
+    fn, args = build_lowerable(cfg, shape, mesh, microbatch=microbatch)
+
+    t0 = time.time()
+    # set_mesh (not plain `with mesh:`) so the abstract mesh is visible during
+    # tracing — activation sharding constraints resolve against it.
+    with jax.sharding.set_mesh(mesh):
+        lowered = jax.jit(fn).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem_text = None
+    try:
+        mem_text = str(compiled.memory_analysis())
+    except Exception as e:  # pragma: no cover
+        mem_text = f"unavailable: {e}"
+
+    rec_obj = analysis.analyze(compiled, arch=arch, shape=shape,
+                               mesh_name=mesh_name, chips=chips, cfg=cfg,
+                               extra={"lower_s": round(t_lower, 1),
+                                      "compile_s": round(t_compile, 1),
+                                      "microbatch": microbatch,
+                                      "seq_parallel": seq_parallel,
+                                      "tag": tag,
+                                      "memory_analysis": mem_text})
+    rec = {"status": "ok", **rec_obj.to_json()}
+    if verbose:
+        label = f"{arch} × {shape_name} × {mesh_name}" + (f" [{tag}]" if tag else "")
+        print(f"[dryrun] {label}: "
+              f"compute={rec_obj.compute_s:.4f}s memory={rec_obj.memory_s:.4f}s "
+              f"collective={rec_obj.collective_s:.4f}s dominant={rec_obj.dominant} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print(f"[dryrun]   memory_analysis: {mem_text[:300]}")
+    _write(rec, out_dir, tag)
+    return rec
+
+
+def _write(rec: dict, out_dir: Optional[str], tag: str = ""):
+    if not out_dir:
+        return
+    p = pathlib.Path(out_dir)
+    p.mkdir(parents=True, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    name = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}{suffix}.json"
+    (p / name).write_text(json.dumps(rec, indent=1))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(INPUT_SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × shape) combination")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=1,
+                    help="grad-accumulation chunks (perf iteration)")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="sequence-parallel activation constraints")
+    ap.add_argument("--attention-impl", default="",
+                    choices=("", "reference", "chunked"),
+                    help="override attention path (perf iteration)")
+    ap.add_argument("--no-scan", action="store_true",
+                    help="unroll the layer stack (per-layer FSDP gathers)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output record (perf variants)")
+    args = ap.parse_args()
+
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    if args.all:
+        combos = [(a, s) for a in configs.ARCH_IDS for s in INPUT_SHAPES]
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch/--shape required unless --all")
+        combos = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in combos:
+        for mesh_name in meshes:
+            if args.skip_existing and args.out:
+                f = pathlib.Path(args.out) / f"{arch}_{shape}_{mesh_name}.json"
+                if f.exists() and json.loads(f.read_text()).get("status") in ("ok", "skipped"):
+                    print(f"[dryrun] skip existing {f.name}")
+                    continue
+            try:
+                run_one(arch, shape, mesh_name, args.out,
+                        microbatch=args.microbatch,
+                        seq_parallel=args.seq_parallel,
+                        attention_impl=args.attention_impl,
+                        no_scan=args.no_scan, tag=args.tag)
+            except Exception as e:  # noqa: BLE001
+                print(f"[dryrun] FAILED {arch} × {shape} × {mesh_name}: {e!r}")
+                failures.append((arch, shape, mesh_name, repr(e)))
+                _write({"arch": arch, "shape": shape, "mesh": mesh_name,
+                        "status": "failed", "error": repr(e)}, args.out)
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production mesh definitions (TPU v5e target).
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  2 pods × 256 chips as (pod=2, data=16, model=16) — the "pod" axis
+carries SpreadFGL's edge-server topology (core/gossip.py).
+
+Functions, not module constants: importing this module never touches jax
+device state (dryrun.py must set XLA_FLAGS before the first jax call).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, model: int = 1, data: int = 0, pod: int = 0) -> Mesh:
+    """Small mesh over whatever host devices exist (tests/examples)."""
+    n = len(jax.devices())
+    if pod:
+        data = data or max(1, n // (model * pod))
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    data = data or max(1, n // model)
+    return jax.make_mesh((data, model), ("data", "model"))

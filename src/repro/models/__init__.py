@@ -1,0 +1,2 @@
+"""Model zoo for the 10 assigned architectures: shared layers, GQA/SWA
+attention, MoE, mamba SSM, xLSTM, grouped-scan assembly, and serving paths."""

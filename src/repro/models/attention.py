@@ -1,0 +1,261 @@
+"""GQA attention with RoPE, qk-norm, sliding windows, cross-attn, KV caches.
+
+Train/prefill attention routes through the flash-attention Pallas kernel when
+``impl`` is "pallas"/"pallas_interpret"; the jnp oracle otherwise (CPU + clean
+dry-run HLO). Decode (single token vs cache) and cross-attention always use the
+jnp path — both are O(S·D) matmuls with no online-softmax advantage.
+
+Sliding-window layers keep a ring-buffer cache of ``window`` entries; global
+layers keep the full-sequence cache. window == 0 means global.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+PyTree = Dict
+
+
+def init_attention(key, d: int, num_heads: int, num_kv_heads: int, head_dim: int,
+                   *, qk_norm: bool, use_bias: bool, dtype) -> PyTree:
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    p = {
+        "wq": L.truncated_normal(ks[0], (d, num_heads * head_dim), std, dtype),
+        "wk": L.truncated_normal(ks[1], (d, num_kv_heads * head_dim), std, dtype),
+        "wv": L.truncated_normal(ks[2], (d, num_kv_heads * head_dim), std, dtype),
+        "wo": L.truncated_normal(ks[3], (num_heads * head_dim, d),
+                                 (num_heads * head_dim) ** -0.5, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,), dtype)
+        p["k_norm"] = jnp.ones((head_dim,), dtype)
+    if use_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["bo"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def axes_attention(*, qk_norm: bool, use_bias: bool) -> PyTree:
+    p = {"wq": ("embed", "heads"), "wk": ("embed", "kv_heads"),
+         "wv": ("embed", "kv_heads"), "wo": ("heads", "embed")}
+    if qk_norm:
+        p["q_norm"] = (None,)
+        p["k_norm"] = (None,)
+    if use_bias:
+        p["bq"] = ("heads",)
+        p["bk"] = ("kv_heads",)
+        p["bv"] = ("kv_heads",)
+        p["bo"] = ("embed",)
+    return p
+
+
+def _project_qkv(p: PyTree, x: jnp.ndarray, xkv: jnp.ndarray, num_heads: int,
+                 num_kv_heads: int, head_dim: int, qk_norm: bool):
+    b, s = x.shape[0], x.shape[1]
+    skv = xkv.shape[1]
+    q = x @ p["wq"] + p.get("bq", 0.0)
+    k = xkv @ p["wk"] + p.get("bk", 0.0)
+    v = xkv @ p["wv"] + p.get("bv", 0.0)
+    q = q.reshape(b, s, num_heads, head_dim).transpose(0, 2, 1, 3)
+    k = k.reshape(b, skv, num_kv_heads, head_dim).transpose(0, 2, 1, 3)
+    v = v.reshape(b, skv, num_kv_heads, head_dim).transpose(0, 2, 1, 3)
+    if qk_norm:
+        q = L.rms_head_norm(p["q_norm"], q)
+        k = L.rms_head_norm(p["k_norm"], k)
+    return q, k, v
+
+
+def _sdpa_chunked(q, k, v, *, causal: bool, window: int,
+                  chunk: int = 1024) -> jnp.ndarray:
+    """Flash-style online-softmax attention in pure JAX: lax.scan over query
+    chunks so only [chunk × Skv] score slabs ever materialize. Same math as
+    _sdpa (f32 accumulation); peak activation memory drops by Sq/chunk.
+
+    This is the jnp twin of the Pallas kernel — used when the dry-run needs a
+    CPU-lowerable module whose HLO does not carry S×S temporaries (§Perf).
+    """
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    if hkv != hq:
+        k = jnp.repeat(k, hq // hkv, axis=1)
+        v = jnp.repeat(v, hq // hkv, axis=1)
+    chunk = min(chunk, sq)
+    if sq % chunk:
+        chunk = sq  # ragged: fall back to one chunk
+    n_chunks = sq // chunk
+    qc = jnp.moveaxis(q.reshape(b, hq, n_chunks, chunk, dh), 2, 0)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    offset = skv - sq
+
+    # Sliding-window layers only ever see keys in [qpos-window, qpos]: slice
+    # the kv band per chunk instead of masking the full row — cuts score
+    # traffic/FLOPs from O(S²) to O(S·(window+chunk)) (SWA-kernel analogue).
+    import os as _os
+    band = 0
+    if (window and causal and window + chunk < skv
+            and _os.environ.get("REPRO_DISABLE_WINDOW_BAND", "0") != "1"):
+        band = chunk * ((window + chunk + chunk - 1) // chunk)  # multiple of chunk
+        kf = jnp.pad(kf, ((0, 0), (0, 0), (band, 0), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, 0), (band, 0), (0, 0)))
+
+    def one_chunk(ci, q_blk):
+        if band:
+            start = ci * chunk + offset  # band-padded kv start for this chunk
+            kb = jax.lax.dynamic_slice_in_dim(kf, start, band + chunk, axis=2)
+            vb = jax.lax.dynamic_slice_in_dim(vf, start, band + chunk, axis=2)
+            logits = jnp.einsum("bhqd,bhkd->bhqk", q_blk.astype(jnp.float32),
+                                kb) / (dh ** 0.5)
+            qpos = jnp.arange(chunk)[:, None] + band
+            kpos = jnp.arange(band + chunk)[None, :]
+            mask = (kpos <= qpos) & (kpos > qpos - window)
+            # exclude the zero-padding prepended before position 0
+            mask &= (kpos + ci * chunk + offset) >= band
+            logits = jnp.where(mask[None, None], logits, -1e30)
+            probs = jax.nn.softmax(logits, axis=-1)
+            return jnp.einsum("bhqk,bhkd->bhqd", probs, vb)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", q_blk.astype(jnp.float32),
+                            kf) / (dh ** 0.5)
+        qpos = ci * chunk + jnp.arange(chunk)[:, None] + offset
+        kpos = jnp.arange(skv)[None, :]
+        mask = jnp.ones((chunk, skv), bool) if not causal else (kpos <= qpos)
+        if window:
+            mask &= kpos > qpos - window
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+
+    outs = jax.lax.map(lambda args: one_chunk(*args),
+                       (jnp.arange(n_chunks), qc))
+    out = jnp.moveaxis(outs, 0, 2).reshape(b, hq, sq, dh)
+    return out.astype(q.dtype)
+
+
+def _sdpa(q, k, v, *, causal: bool, window: int, q_offset: jnp.ndarray | int = 0,
+          kv_valid_len: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """jnp reference attention. q: [B,H,Sq,D], k/v: [B,Hkv,Skv,D]."""
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    if hkv != hq:
+        k = jnp.repeat(k, hq // hkv, axis=1)
+        v = jnp.repeat(v, hq // hkv, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (dh ** 0.5)
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool) if not causal else (kpos <= qpos)
+    if window:
+        mask &= kpos > qpos - window
+    if kv_valid_len is not None:
+        mask = mask & (kpos < kv_valid_len)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def self_attention_kv(p: PyTree, x: jnp.ndarray, *, num_heads: int,
+                      num_kv_heads: int, head_dim: int, window: int = 0,
+                      rope_theta: float = 10000.0, qk_norm: bool = False,
+                      positions: Optional[jnp.ndarray] = None,
+                      impl: str = "reference", use_rope: bool = True
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-sequence causal self-attention returning the (roped) k/v for
+    prefill cache construction. k, v: [B, Hkv, S, D]."""
+    b, s, d = x.shape
+    q, k, v = _project_qkv(p, x, x, num_heads, num_kv_heads, head_dim, qk_norm)
+    if use_rope:
+        pos = positions if positions is not None else jnp.arange(s)
+        q = L.apply_rope(q, pos, rope_theta)
+        k = L.apply_rope(k, pos, rope_theta)
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+        out = kops.mha(q, k, v, causal=True, window=int(window) or None,
+                       interpret=(impl == "pallas_interpret"))
+    elif impl == "chunked":
+        out = _sdpa_chunked(q, k, v, causal=True, window=int(window))
+    else:
+        out = _sdpa(q, k, v, causal=True, window=int(window))
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, num_heads * head_dim)
+    return out @ p["wo"] + p.get("bo", 0.0), k, v
+
+
+def self_attention(p: PyTree, x: jnp.ndarray, **kw) -> jnp.ndarray:
+    """Full-sequence causal self-attention (train / prefill)."""
+    out, _, _ = self_attention_kv(p, x, **kw)
+    return out
+
+
+def cross_attention(p: PyTree, x: jnp.ndarray, memory: jnp.ndarray, *,
+                    num_heads: int, num_kv_heads: int, head_dim: int,
+                    qk_norm: bool = False) -> jnp.ndarray:
+    """Non-causal attention over encoder/image memory (jnp path)."""
+    b, s, d = x.shape
+    q, k, v = _project_qkv(p, x, memory, num_heads, num_kv_heads, head_dim, qk_norm)
+    out = _sdpa(q, k, v, causal=False, window=0)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, num_heads * head_dim)
+    return out @ p["wo"] + p.get("bo", 0.0)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, num_kv_heads: int, head_dim: int, *, seq_len: int,
+                  window: int, dtype) -> PyTree:
+    """Ring buffer of min(seq_len, window) entries for windowed layers."""
+    size = min(seq_len, window) if window else seq_len
+    shape = (batch, num_kv_heads, size, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def axes_kv_cache() -> PyTree:
+    return {"k": ("batch", "kv_heads", None, None),
+            "v": ("batch", "kv_heads", None, None)}
+
+
+def decode_self_attention(p: PyTree, x: jnp.ndarray, cache: PyTree, pos: jnp.ndarray,
+                          *, num_heads: int, num_kv_heads: int, head_dim: int,
+                          window: int = 0, rope_theta: float = 10000.0,
+                          qk_norm: bool = False, use_rope: bool = True
+                          ) -> Tuple[jnp.ndarray, PyTree]:
+    """One-token decode: x [B, 1, d], pos scalar int32 (current position).
+
+    Returns (out [B, 1, d], updated cache). Windowed layers write the ring slot
+    pos % window; global layers write slot pos.
+    """
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, x, x, num_heads, num_kv_heads, head_dim, qk_norm)
+    if use_rope:
+        pvec = jnp.full((b, 1), pos, jnp.int32)
+        q = L.apply_rope(q, pvec, rope_theta)
+        k = L.apply_rope(k, pvec, rope_theta)
+    size = cache["k"].shape[2]
+    slot = (pos % size).astype(jnp.int32) if window else pos.astype(jnp.int32)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=2)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=2)
+
+    hq, hkv = num_heads, num_kv_heads
+    kk, vv = ck, cv
+    if hkv != hq:
+        kk = jnp.repeat(kk, hq // hkv, axis=1)
+        vv = jnp.repeat(vv, hq // hkv, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) / (head_dim ** 0.5)
+    kidx = jnp.arange(size)[None, None, None, :]
+    if window:
+        valid = (kidx <= slot) | (pos >= size)  # ring: all slots valid once full
+    else:
+        valid = kidx <= pos
+    logits = jnp.where(valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vv.astype(jnp.float32)).astype(x.dtype)
+    out = out.transpose(0, 2, 1, 3).reshape(b, 1, num_heads * head_dim)
+    return out @ p["wo"] + p.get("bo", 0.0), {"k": ck, "v": cv}

@@ -1,0 +1,280 @@
+"""Serving paths: prefill (prompt -> cache) and decode_step (1 token + cache).
+
+Cache layout is a per-layer python list (static length), so heterogeneous
+layers (windowed ring buffers vs full-length KV, mamba/mLSTM/sLSTM states)
+coexist. ``decode_step`` unrolls the layer loop — per-layer decode graphs are
+tiny, and unrolling lets each layer index its static slice of the grouped
+parameter stacks.
+
+Windowed layers keep a ring buffer of ``window`` slots; after prefill the last
+``window`` kv entries are rolled into ring order so decode can continue with
+``slot = pos % window``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models import xlstm as X
+from repro.models.config import ModelConfig
+from repro.models.transformer import (_block_kind, _encode_memory,
+                                      apply_cross_block, group_size)
+
+PyTree = Any
+
+
+def _layer_params(params: PyTree, cfg: ModelConfig, layer: int) -> PyTree:
+    """Static slice of the grouped stacks for one layer."""
+    if cfg.arch_type == "ssm":
+        return params["blocks"][layer]
+    g = group_size(cfg)
+    gi, r = layer // g, layer % g
+    return jax.tree.map(lambda t: t[gi], params["blocks"][r])
+
+
+def _cross_params(params: PyTree, cfg: ModelConfig, gi: int) -> PyTree:
+    return jax.tree.map(lambda t: t[gi], params["cross_blocks"])
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *,
+               memory: Optional[jnp.ndarray] = None) -> PyTree:
+    """Zeroed cache sized for a maximum context of ``seq_len``."""
+    dt = jnp.dtype(cfg.dtype)
+    ws = cfg.windows
+    layers: List[PyTree] = []
+    for i in range(cfg.num_layers):
+        kind = _block_kind(cfg, i)
+        entry: Dict[str, PyTree] = {}
+        if kind in ("attn", "hybrid", "encdec_dec"):
+            entry.update(A.init_kv_cache(batch, cfg.num_kv_heads, cfg.head_dim,
+                                         seq_len=seq_len, window=ws[i], dtype=dt))
+        if kind == "hybrid":
+            entry.update(S.init_mamba_state(batch, cfg.d_model,
+                                            expand=cfg.ssm_expand,
+                                            state=cfg.ssm_state))
+        if kind == "mlstm":
+            entry.update(X.init_mlstm_state(batch, cfg.d_model, cfg.num_heads,
+                                            expand=cfg.ssm_expand))
+        if kind == "slstm":
+            entry.update(X.init_slstm_state(batch, cfg.d_model))
+        layers.append(entry)
+    cache: Dict[str, PyTree] = {"layers": layers,
+                                "pos": jnp.zeros((), jnp.int32)}
+    if memory is not None:
+        cache["memory"] = memory
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+def decode_step(params: PyTree, cfg: ModelConfig, cache: PyTree,
+                token: jnp.ndarray) -> Tuple[jnp.ndarray, PyTree]:
+    """token: [B, 1] int32 -> (logits [B, V] f32, updated cache)."""
+    x = L.embed_tokens(params["embed"], token)
+    pos = cache["pos"]
+    memory = cache.get("memory")
+    if cfg.is_encdec:
+        pos_table = params["embed"]["positions"]
+        x = x + jnp.take(pos_table, pos % pos_table.shape[0], axis=0)[None, None]
+    ws = cfg.windows
+    g = group_size(cfg)
+    new_layers: List[PyTree] = []
+    aux_kw = dict(num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                  head_dim=cfg.head_dim, rope_theta=cfg.rope_theta)
+
+    for i in range(cfg.num_layers):
+        kind = _block_kind(cfg, i)
+        bp = _layer_params(params, cfg, i)
+        entry = cache["layers"][i]
+        new_entry: Dict[str, PyTree] = {}
+        if kind in ("attn", "hybrid", "encdec_dec"):
+            h = L.apply_norm(bp["ln1"], x, cfg.norm_kind)
+            attn_out, kv = A.decode_self_attention(
+                bp["attn"], h, {"k": entry["k"], "v": entry["v"]}, pos,
+                window=ws[i], qk_norm=cfg.qk_norm,
+                use_rope=not cfg.is_encdec, **aux_kw)
+            new_entry.update(kv)
+            if kind == "hybrid":
+                mamba_out, hstate = S.decode_mamba(bp["mamba"], h,
+                                                   {"h": entry["h"]},
+                                                   state=cfg.ssm_state)
+                attn_out = 0.5 * (attn_out + mamba_out)
+                new_entry.update(hstate)
+            x = x + attn_out
+            if kind == "encdec_dec":
+                h = L.apply_norm(bp["ln_cross"], x, cfg.norm_kind)
+                x = x + A.cross_attention(bp["cross"], h, memory,
+                                          num_heads=cfg.num_heads,
+                                          num_kv_heads=cfg.num_kv_heads,
+                                          head_dim=cfg.head_dim)
+            h = L.apply_norm(bp["ln2"], x, cfg.norm_kind)
+            if cfg.is_moe:
+                ff, _ = M.apply_moe(bp["moe"], h, num_experts=cfg.num_experts,
+                                    top_k=cfg.experts_per_token,
+                                    capacity_factor=cfg.capacity_factor,
+                                    act=cfg.act)
+            else:
+                ff = L.apply_mlp(bp["mlp"], h, cfg.act)
+            x = x + ff
+        elif kind == "mlstm":
+            h = L.apply_norm(bp["ln1"], x, cfg.norm_kind)
+            out, st = X.decode_mlstm(bp["mlstm"], h, entry, cfg.num_heads)
+            x = x + out
+            new_entry.update(st)
+        elif kind == "slstm":
+            h = L.apply_norm(bp["ln1"], x, cfg.norm_kind)
+            out, st = X.decode_slstm(bp["slstm"], h, entry)
+            x = x + out
+            new_entry.update(st)
+        new_layers.append(new_entry)
+        # VLM gated cross-attention at group boundaries.
+        if cfg.cross_attn_interval and (i + 1) % g == 0:
+            cp = _cross_params(params, cfg, i // g)
+            x = apply_cross_block(cp, x, memory, cfg)
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_kind)
+    logits = L.unembed(params["embed"], x, softcap=cfg.logit_softcap)
+    new_cache = dict(cache, layers=new_layers, pos=pos + 1)
+    return logits[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def prefill(params: PyTree, cfg: ModelConfig, tokens: jnp.ndarray, *,
+            max_len: Optional[int] = None,
+            memory: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, PyTree]:
+    """tokens [B, S] -> (last-position logits [B, V], decode-ready cache).
+
+    ``max_len``: total context budget the cache must hold (>= S); defaults S.
+    """
+    from repro.sharding.constraints import constrain
+    seq_ax = "seq" if cfg.seq_parallel_activations else None
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = L.embed_tokens(params["embed"], tokens)
+    x = constrain(x, "batch", seq_ax, None)
+    if cfg.is_encdec:
+        pos_table = params["embed"]["positions"]
+        x = x + jnp.take(pos_table, jnp.arange(s) % pos_table.shape[0], axis=0)[None]
+        memory = _encode_memory(params, cfg, memory)
+    ws = cfg.windows
+    g = group_size(cfg)
+    cache = init_cache(cfg, b, max_len, memory=memory)
+    attn_kw = dict(num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                   head_dim=cfg.head_dim, rope_theta=cfg.rope_theta)
+
+    def run_layer(bp, x, i):
+        """Returns (x, cache_entry)."""
+        kind = _block_kind(cfg, i)
+        entry: Dict[str, PyTree] = {}
+        if kind in ("attn", "hybrid", "encdec_dec"):
+            h = L.apply_norm(bp["ln1"], x, cfg.norm_kind)
+            attn_out, k, v = A.self_attention_kv(
+                bp["attn"], h, window=ws[i], qk_norm=cfg.qk_norm,
+                impl=cfg.attention_impl, use_rope=not cfg.is_encdec, **attn_kw)
+            entry["k"], entry["v"] = k, v
+            if kind == "hybrid":
+                mamba_out, hstate = S.apply_mamba(bp["mamba"], h,
+                                                  state=cfg.ssm_state,
+                                                  return_state=True)
+                attn_out = 0.5 * (attn_out + mamba_out)
+                entry.update(hstate)
+            x = x + attn_out
+            if kind == "encdec_dec":
+                h = L.apply_norm(bp["ln_cross"], x, cfg.norm_kind)
+                x = x + A.cross_attention(bp["cross"], h, memory,
+                                          num_heads=cfg.num_heads,
+                                          num_kv_heads=cfg.num_kv_heads,
+                                          head_dim=cfg.head_dim)
+            h = L.apply_norm(bp["ln2"], x, cfg.norm_kind)
+            if cfg.is_moe:
+                ff, _ = M.apply_moe(bp["moe"], h, num_experts=cfg.num_experts,
+                                    top_k=cfg.experts_per_token,
+                                    capacity_factor=cfg.capacity_factor,
+                                    act=cfg.act)
+            else:
+                ff = L.apply_mlp(bp["mlp"], h, cfg.act)
+            x = x + ff
+        elif kind == "mlstm":
+            h = L.apply_norm(bp["ln1"], x, cfg.norm_kind)
+            out, st = X.apply_mlstm(bp["mlstm"], h, cfg.num_heads,
+                                    return_state=True)
+            x = x + out
+            entry.update(st)
+        elif kind == "slstm":
+            h = L.apply_norm(bp["ln1"], x, cfg.norm_kind)
+            out, st = X.apply_slstm(bp["slstm"], h, cfg.num_heads,
+                                    return_state=True)
+            x = x + out
+            entry.update(st)
+        return x, entry
+
+    if cfg.arch_type == "ssm":
+        entries = []
+        for i, bp in enumerate(params["blocks"]):
+            x, entry = run_layer(bp, x, i)
+            entries.append(entry)
+    else:
+        has_cross = bool(cfg.cross_attn_interval)
+
+        def body(x, xs):
+            x = constrain(x, "batch", seq_ax, None)
+            blocks = xs[:g]
+            cross = xs[g] if has_cross else None
+            group_entries = []
+            for r in range(g):
+                x, entry = run_layer(blocks[r], x, r)
+                group_entries.append(entry)
+            if has_cross:
+                x = apply_cross_block(cross, x, memory, cfg)
+            return x, tuple(group_entries)
+
+        xs = tuple(params["blocks"])
+        if has_cross:
+            xs = xs + (params["cross_blocks"],)
+        fn = jax.checkpoint(body) if cfg.remat else body
+        x, ys = jax.lax.scan(fn, x, xs)
+        # ys[r] leaves have leading n_groups; regroup per layer.
+        entries = []
+        for i in range(cfg.num_layers):
+            gi, r = i // g, i % g
+            entries.append(jax.tree.map(lambda t: t[gi], ys[r]))
+
+    # Convert stacked prefill kv into decode cache layout.
+    for i, entry in enumerate(entries):
+        tgt = cache["layers"][i]
+        if "k" in entry:
+            size = tgt["k"].shape[2]
+            k, v = entry["k"], entry["v"]
+            if size >= s:  # global (or window >= prompt): plain left-aligned
+                tgt["k"] = jax.lax.dynamic_update_slice_in_dim(tgt["k"], k, 0, 2)
+                tgt["v"] = jax.lax.dynamic_update_slice_in_dim(tgt["v"], v, 0, 2)
+            else:  # ring buffer: keep last `size`, rolled to slot order
+                ksl, vsl = k[:, :, s - size:], v[:, :, s - size:]
+                shift = s % size
+                tgt["k"] = jnp.roll(ksl, shift, axis=2)
+                tgt["v"] = jnp.roll(vsl, shift, axis=2)
+        for key2 in ("h", "c", "n", "m"):
+            if key2 in entry:
+                tgt[key2] = entry[key2]
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+
+    x_last = x[:, -1]
+    x_last = L.apply_norm(params["final_norm"], x_last, cfg.norm_kind)
+    logits = L.unembed(params["embed"], x_last, softcap=cfg.logit_softcap)
+    return logits, cache

@@ -1,0 +1,159 @@
+"""Shared transformer building blocks (pure JAX, init/apply style).
+
+Every ``init_*`` has a matching ``axes_*`` returning a pytree of *logical axis
+name tuples* with the same structure — sharding/rules.py maps logical names to
+mesh axes. The stacked-layer dimension is always logical axis "layers"
+(never sharded).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Dict
+
+
+def truncated_normal(key, shape, std, dtype):
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(kind: str, d: int, dtype) -> PyTree:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def axes_norm(kind: str) -> PyTree:
+    p = {"scale": ("embed",)}
+    if kind == "layernorm":
+        p["bias"] = ("embed",)
+    return p
+
+
+def apply_norm(p: PyTree, x: jnp.ndarray, kind: str, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    else:
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mean) * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+        out = out + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rms_head_norm(scale: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """Per-head qk-norm (qwen3): x [..., D], scale [D]."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [B, H, S, D]; positions: [B, S] (or [S])."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                    # [D/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[:, None, :, None].astype(jnp.float32) * freqs  # [B,1,S,D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (gated silu or plain gelu)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, ff: int, act: str, use_bias: bool, dtype) -> PyTree:
+    ks = jax.random.split(key, 3)
+    std_in, std_out = d ** -0.5, ff ** -0.5
+    p = {"w_up": truncated_normal(ks[0], (d, ff), std_in, dtype),
+         "w_down": truncated_normal(ks[1], (ff, d), std_out, dtype)}
+    if act == "silu":
+        p["w_gate"] = truncated_normal(ks[2], (d, ff), std_in, dtype)
+    if use_bias:
+        p["b_up"] = jnp.zeros((ff,), dtype)
+        p["b_down"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def axes_mlp(act: str, use_bias: bool) -> PyTree:
+    p = {"w_up": ("embed", "ff"), "w_down": ("ff", "embed")}
+    if act == "silu":
+        p["w_gate"] = ("embed", "ff")
+    if use_bias:
+        p["b_up"] = ("ff",)
+        p["b_down"] = ("embed",)
+    return p
+
+
+def apply_mlp(p: PyTree, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    up = x @ p["w_up"]
+    if "b_up" in p:
+        up = up + p["b_up"]
+    if act == "silu":
+        up = jax.nn.silu(x @ p["w_gate"]) * up
+    else:
+        up = jax.nn.gelu(up)
+    out = up @ p["w_down"]
+    if "b_down" in p:
+        out = out + p["b_down"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d: int, dtype, *, tie: bool,
+               max_positions: int = 0) -> PyTree:
+    ks = jax.random.split(key, 3)
+    p = {"tokens": truncated_normal(ks[0], (vocab, d), d ** -0.5, dtype)}
+    if not tie:
+        p["unembed"] = truncated_normal(ks[1], (d, vocab), d ** -0.5, dtype)
+    if max_positions:
+        p["positions"] = truncated_normal(ks[2], (max_positions, d), 0.02, dtype)
+    return p
+
+
+def axes_embed(*, tie: bool, max_positions: int = 0) -> PyTree:
+    p = {"tokens": ("vocab", "embed")}
+    if not tie:
+        p["unembed"] = ("embed", "vocab")
+    if max_positions:
+        p["positions"] = (None, "embed")
+    return p
+
+
+def embed_tokens(p: PyTree, tokens: jnp.ndarray, *, scale: bool = True) -> jnp.ndarray:
+    x = p["tokens"][tokens]
+    if scale:
+        x = x * jnp.asarray(x.shape[-1] ** 0.5, x.dtype)
+    return x
+
+
+def unembed(p: PyTree, x: jnp.ndarray, *, softcap: float = 0.0) -> jnp.ndarray:
+    w = p.get("unembed")
+    logits = x @ w if w is not None else x @ p["tokens"].T
+    logits = logits.astype(jnp.float32)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits

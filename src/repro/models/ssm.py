@@ -1,0 +1,125 @@
+"""Selective SSM (Mamba-style) mixer — used by the hybrid arch (hymba).
+
+TPU adaptation: instead of the CUDA selective-scan kernel, the recurrence
+    h_t = exp(A·dt_t) ⊙ h_{t-1} + dt_t·B_t·x_t,   y_t = C_t·h_t + D⊙x_t
+runs CHUNKWISE: within a chunk of Q=128 steps an associative scan materializes
+[B, Q, d_inner, n_state] in VMEM-sized pieces; across chunks a lax.scan carries
+only the [B, d_inner, n_state] state. Peak memory is one chunk, sequential
+length is S/Q — the memory-hierarchy-aware analogue of the paper's GPU kernel.
+
+Decode is the plain single-step recurrence on the carried state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+PyTree = Dict
+CHUNK = 128
+
+
+def init_mamba(key, d: int, *, expand: int, state: int, dtype) -> PyTree:
+    di = expand * d
+    ks = jax.random.split(key, 6)
+    std = d ** -0.5
+    p = {
+        "in_proj": L.truncated_normal(ks[0], (d, 2 * di), std, dtype),
+        "w_bc": L.truncated_normal(ks[1], (di, 2 * state), di ** -0.5, dtype),
+        "w_dt": L.truncated_normal(ks[2], (di, 1), di ** -0.5, dtype),
+        "b_dt": jnp.full((1,), -4.0, dtype),  # softplus(-4) ~ small init dt
+        "a_log": jnp.log(jnp.linspace(1.0, float(state), state, dtype=jnp.float32)
+                         )[None, :].repeat(di, 0).astype(jnp.float32),
+        "d_skip": jnp.ones((di,), dtype),
+        "out_proj": L.truncated_normal(ks[3], (di, d), di ** -0.5, dtype),
+    }
+    return p
+
+
+def axes_mamba() -> PyTree:
+    return {"in_proj": ("embed", "inner"), "w_bc": ("inner", None),
+            "w_dt": ("inner", None), "b_dt": (None,),
+            "a_log": ("inner", None), "d_skip": ("inner",),
+            "out_proj": ("inner", "embed")}
+
+
+def _gates(p: PyTree, x: jnp.ndarray, state: int):
+    """Shared projections. x: [..., d] -> (xt, z, dt, b, c)."""
+    xz = x @ p["in_proj"]
+    xt, z = jnp.split(xz, 2, axis=-1)                    # [..., di] each
+    bc = xt @ p["w_bc"]
+    b, c = jnp.split(bc.astype(jnp.float32), 2, axis=-1)  # [..., n]
+    dt = jax.nn.softplus((xt @ p["w_dt"] + p["b_dt"]).astype(jnp.float32))  # [...,1]
+    return xt, z, dt, b, c
+
+
+def apply_mamba(p: PyTree, x: jnp.ndarray, *, state: int,
+                return_state: bool = False):
+    """Full-sequence chunkwise scan. x: [B, S, d] -> [B, S, d]
+    (or (y, {"h": final_state}) when return_state)."""
+    bsz, s, d = x.shape
+    xt, z, dt, bmat, cmat = _gates(p, x, state)
+    di = xt.shape[-1]
+    a = -jnp.exp(p["a_log"])                              # [di, n]
+
+    q = min(CHUNK, s)
+    assert s % q == 0, (s, q)
+    nchunk = s // q
+
+    def reshape_chunks(t):
+        return t.reshape(bsz, nchunk, q, *t.shape[2:])
+
+    xt_c, dt_c = reshape_chunks(xt.astype(jnp.float32)), reshape_chunks(dt)
+    b_c, c_c = reshape_chunks(bmat), reshape_chunks(cmat)
+
+    def chunk_step(h, inputs):
+        xt_q, dt_q, b_q, c_q = inputs                     # [B, q, ...]
+        # Per-step decay & drive: [B, q, di, n]
+        decay = jnp.exp(a[None, None] * dt_q[..., None])  # dt broadcast over n
+        drive = (dt_q * xt_q)[..., None] * b_q[:, :, None, :]
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        acc_a, acc_b = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+        h_all = acc_a * h[:, None] + acc_b                # [B, q, di, n]
+        y = jnp.einsum("bqin,bqn->bqi", h_all, c_q)
+        h_next = h_all[:, -1]
+        return h_next, y
+
+    h0 = jnp.zeros((bsz, di, state), jnp.float32)
+    xs = (jnp.moveaxis(xt_c, 1, 0), jnp.moveaxis(dt_c, 1, 0),
+          jnp.moveaxis(b_c, 1, 0), jnp.moveaxis(c_c, 1, 0))
+    h_final, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, di)
+    y = y + xt.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = (y.astype(x.dtype)) @ p["out_proj"]
+    if return_state:
+        return out, {"h": h_final}
+    return out
+
+
+def init_mamba_state(batch: int, d: int, *, expand: int, state: int) -> PyTree:
+    return {"h": jnp.zeros((batch, expand * d, state), jnp.float32)}
+
+
+def decode_mamba(p: PyTree, x: jnp.ndarray, cache: PyTree, *, state: int
+                 ) -> Tuple[jnp.ndarray, PyTree]:
+    """Single-step recurrence. x: [B, 1, d]."""
+    xt, z, dt, bmat, cmat = _gates(p, x[:, 0], state)     # [B, ...]
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(a[None] * dt[..., None])              # [B, di, n]
+    drive = (dt * xt.astype(jnp.float32))[..., None] * bmat[:, None, :]
+    h = decay * cache["h"] + drive
+    y = jnp.einsum("bin,bn->bi", h, cmat)
+    y = y + xt.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = y.astype(x.dtype) @ p["out_proj"]
+    return out[:, None, :], {"h": h}

@@ -1,0 +1,357 @@
+"""Model assembly for all six architecture families.
+
+Layer stacks are scanned over *repeating groups*: the per-layer heterogeneity
+of every assigned arch is periodic (gemma3's 5 local : 1 global pattern has
+period 6; llama-vision inserts a cross-attention block every 5 layers; dense
+stacks have period 1), so parameters are stored as a tuple of ``group_size``
+stacked trees, each with leading dim ``num_groups``, and lax.scan runs over
+groups with a statically-unrolled inner loop over the group. This keeps
+compile time O(group) while letting every layer keep a static window size
+(required by the Pallas flash kernel).
+
+The xlstm family (12 distinct small layers) uses an unrolled list instead.
+
+Three entry points per model:
+- ``forward``      : [B, S] tokens -> logits (training).
+- ``prefill``      : tokens -> (last-position logits, per-layer decode cache).
+- ``decode_step``  : one token + cache -> (logits, cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models import xlstm as X
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Group structure
+# ---------------------------------------------------------------------------
+
+def group_size(cfg: ModelConfig) -> int:
+    """Smallest period covering window pattern + cross-attn insertion."""
+    if cfg.arch_type == "ssm":
+        return cfg.num_layers  # unrolled
+    ws = cfg.windows
+    period = 1
+    for p in range(1, cfg.num_layers + 1):
+        if cfg.num_layers % p:
+            continue
+        if all(ws[i] == ws[i % p] for i in range(cfg.num_layers)):
+            period = p
+            break
+    if cfg.cross_attn_interval:
+        # group must end exactly where a cross block goes
+        period = _lcm(period, cfg.cross_attn_interval)
+    return period
+
+
+def _lcm(a, b):
+    import math
+    return a * b // math.gcd(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Block init / axes / apply
+# ---------------------------------------------------------------------------
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_block(key, cfg: ModelConfig, kind: str) -> PyTree:
+    """kind: attn | hybrid | encdec_dec | encoder | mlstm | slstm."""
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: Dict[str, PyTree] = {}
+    if kind in ("attn", "hybrid", "encdec_dec", "encoder"):
+        p["ln1"] = L.init_norm(cfg.norm_kind, d, dt)
+        p["attn"] = A.init_attention(ks[0], d, cfg.num_heads, cfg.num_kv_heads,
+                                     cfg.head_dim, qk_norm=cfg.qk_norm,
+                                     use_bias=cfg.use_bias, dtype=dt)
+        p["ln2"] = L.init_norm(cfg.norm_kind, d, dt)
+        if cfg.is_moe:
+            p["moe"] = M.init_moe(ks[1], d, cfg.d_ff, cfg.num_experts, cfg.act, dt)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], d, cfg.d_ff, cfg.act, cfg.use_bias, dt)
+    if kind == "hybrid":
+        p["mamba"] = S.init_mamba(ks[2], d, expand=cfg.ssm_expand,
+                                  state=cfg.ssm_state, dtype=dt)
+    if kind == "encdec_dec":
+        p["ln_cross"] = L.init_norm(cfg.norm_kind, d, dt)
+        p["cross"] = A.init_attention(ks[3], d, cfg.num_heads, cfg.num_kv_heads,
+                                      cfg.head_dim, qk_norm=False,
+                                      use_bias=cfg.use_bias, dtype=dt)
+    if kind == "mlstm":
+        p["ln1"] = L.init_norm(cfg.norm_kind, d, dt)
+        p["mlstm"] = X.init_mlstm(ks[0], d, cfg.num_heads,
+                                  expand=cfg.ssm_expand, dtype=dt)
+    if kind == "slstm":
+        p["ln1"] = L.init_norm(cfg.norm_kind, d, dt)
+        p["slstm"] = X.init_slstm(ks[0], d, cfg.num_heads, dtype=dt)
+    return p
+
+
+def axes_block(cfg: ModelConfig, kind: str) -> PyTree:
+    p: Dict[str, PyTree] = {}
+    if kind in ("attn", "hybrid", "encdec_dec", "encoder"):
+        p["ln1"] = L.axes_norm(cfg.norm_kind)
+        p["attn"] = A.axes_attention(qk_norm=cfg.qk_norm, use_bias=cfg.use_bias)
+        p["ln2"] = L.axes_norm(cfg.norm_kind)
+        if cfg.is_moe:
+            p["moe"] = M.axes_moe(cfg.act)
+        else:
+            p["mlp"] = L.axes_mlp(cfg.act, cfg.use_bias)
+    if kind == "hybrid":
+        p["mamba"] = S.axes_mamba()
+    if kind == "encdec_dec":
+        p["ln_cross"] = L.axes_norm(cfg.norm_kind)
+        p["cross"] = A.axes_attention(qk_norm=False, use_bias=cfg.use_bias)
+    if kind == "mlstm":
+        p["ln1"] = L.axes_norm(cfg.norm_kind)
+        p["mlstm"] = X.axes_mlstm()
+    if kind == "slstm":
+        p["ln1"] = L.axes_norm(cfg.norm_kind)
+        p["slstm"] = X.axes_slstm()
+    return p
+
+
+def apply_block(bp: PyTree, x: jnp.ndarray, cfg: ModelConfig, kind: str, *,
+                window: int, memory: Optional[jnp.ndarray] = None,
+                causal: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    use_rope = not cfg.is_encdec
+    if kind in ("attn", "hybrid", "encdec_dec", "encoder"):
+        h = L.apply_norm(bp["ln1"], x, cfg.norm_kind)
+        if kind == "encoder" or not causal:
+            q, k, v = A._project_qkv(bp["attn"], h, h, cfg.num_heads,
+                                     cfg.num_kv_heads, cfg.head_dim, cfg.qk_norm)
+            attn_out = A._sdpa(q, k, v, causal=False, window=0)
+            b, s = x.shape[0], x.shape[1]
+            attn_out = attn_out.transpose(0, 2, 1, 3).reshape(b, s, -1)
+            attn_out = attn_out @ bp["attn"]["wo"] + bp["attn"].get("bo", 0.0)
+        else:
+            attn_out = A.self_attention(
+                bp["attn"], h, num_heads=cfg.num_heads,
+                num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+                window=window, rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+                impl=cfg.attention_impl, use_rope=use_rope)
+        if kind == "hybrid":
+            mamba_out = S.apply_mamba(bp["mamba"], h, state=cfg.ssm_state)
+            attn_out = 0.5 * (attn_out + mamba_out)  # parallel heads (hymba)
+        x = x + attn_out
+        if kind == "encdec_dec":
+            h = L.apply_norm(bp["ln_cross"], x, cfg.norm_kind)
+            x = x + A.cross_attention(bp["cross"], h, memory,
+                                      num_heads=cfg.num_heads,
+                                      num_kv_heads=cfg.num_kv_heads,
+                                      head_dim=cfg.head_dim)
+        h = L.apply_norm(bp["ln2"], x, cfg.norm_kind)
+        if cfg.is_moe:
+            ff, aux = M.apply_moe(bp["moe"], h, num_experts=cfg.num_experts,
+                                  top_k=cfg.experts_per_token,
+                                  capacity_factor=cfg.capacity_factor, act=cfg.act)
+        else:
+            ff = L.apply_mlp(bp["mlp"], h, cfg.act)
+        x = x + ff
+    elif kind == "mlstm":
+        h = L.apply_norm(bp["ln1"], x, cfg.norm_kind)
+        x = x + X.apply_mlstm(bp["mlstm"], h, cfg.num_heads)
+    elif kind == "slstm":
+        h = L.apply_norm(bp["ln1"], x, cfg.norm_kind)
+        x = x + X.apply_slstm(bp["slstm"], h, cfg.num_heads)
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def init_cross_block(key, cfg: ModelConfig) -> PyTree:
+    dt = _dtype(cfg)
+    return {"ln": L.init_norm(cfg.norm_kind, cfg.d_model, dt),
+            "attn": A.init_attention(key, cfg.d_model, cfg.num_heads,
+                                     cfg.num_kv_heads, cfg.head_dim,
+                                     qk_norm=False, use_bias=cfg.use_bias, dtype=dt),
+            "gate": jnp.zeros((), dt)}
+
+
+def axes_cross_block(cfg: ModelConfig) -> PyTree:
+    return {"ln": L.axes_norm(cfg.norm_kind),
+            "attn": A.axes_attention(qk_norm=False, use_bias=cfg.use_bias),
+            "gate": ()}
+
+
+def apply_cross_block(cp: PyTree, x: jnp.ndarray, memory: jnp.ndarray,
+                      cfg: ModelConfig) -> jnp.ndarray:
+    """Gated image cross-attention (llama-3.2-vision style)."""
+    h = L.apply_norm(cp["ln"], x, cfg.norm_kind)
+    out = A.cross_attention(cp["attn"], h, memory, num_heads=cfg.num_heads,
+                            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim)
+    return x + jnp.tanh(cp["gate"]) * out
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+def _block_kind(cfg: ModelConfig, layer_idx: int) -> str:
+    if cfg.arch_type == "ssm":
+        return cfg.block_pattern[layer_idx] if cfg.block_pattern else "mlstm"
+    if cfg.arch_type == "hybrid":
+        return "hybrid"
+    if cfg.is_encdec:
+        return "encdec_dec"
+    return "attn"
+
+
+def init_model(key, cfg: ModelConfig) -> PyTree:
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    max_pos = cfg.max_target_positions if cfg.is_encdec else 0
+    params: Dict[str, PyTree] = {
+        "embed": L.init_embed(keys[0], cfg.vocab_size, cfg.d_model, dt,
+                              tie=cfg.tie_embeddings, max_positions=max_pos),
+        "final_norm": L.init_norm(cfg.norm_kind, cfg.d_model, dt),
+    }
+    g = group_size(cfg)
+    n_groups = cfg.num_layers // g
+    if cfg.arch_type == "ssm":
+        params["blocks"] = [
+            init_block(jax.random.fold_in(keys[1], i), cfg, _block_kind(cfg, i))
+            for i in range(cfg.num_layers)]
+    else:
+        blocks = []
+        for r in range(g):
+            kind = _block_kind(cfg, r)
+            def init_one(k):
+                return init_block(k, cfg, kind)
+            ks = jax.random.split(jax.random.fold_in(keys[1], r), n_groups)
+            blocks.append(jax.vmap(init_one)(ks))
+        params["blocks"] = tuple(blocks)
+    if cfg.cross_attn_interval:
+        ks = jax.random.split(keys[2], n_groups)
+        params["cross_blocks"] = jax.vmap(
+            lambda k: init_cross_block(k, cfg))(ks)
+    if cfg.is_encdec:
+        enc_keys = jax.random.split(keys[3], cfg.encoder_layers)
+        params["encoder"] = {
+            "positions": L.truncated_normal(keys[4], (cfg.encoder_seq, cfg.d_model),
+                                            0.02, dt),
+            "blocks": jax.vmap(lambda k: init_block(k, cfg, "encoder"))(enc_keys),
+            "final_norm": L.init_norm(cfg.norm_kind, cfg.d_model, dt),
+        }
+    return params
+
+
+def model_axes(cfg: ModelConfig) -> PyTree:
+    """Logical-axis tree matching init_model's structure (stacked dims get
+    a leading "layers" axis)."""
+    max_pos = cfg.max_target_positions if cfg.is_encdec else 0
+    axes: Dict[str, PyTree] = {
+        "embed": L.axes_embed(tie=cfg.tie_embeddings, max_positions=max_pos),
+        "final_norm": L.axes_norm(cfg.norm_kind),
+    }
+    g = group_size(cfg)
+
+    def stack(tree):
+        return jax.tree.map(lambda a: ("layers",) + tuple(a), tree,
+                            is_leaf=lambda a: isinstance(a, tuple))
+
+    if cfg.arch_type == "ssm":
+        axes["blocks"] = [axes_block(cfg, _block_kind(cfg, i))
+                          for i in range(cfg.num_layers)]
+    else:
+        axes["blocks"] = tuple(stack(axes_block(cfg, _block_kind(cfg, r)))
+                               for r in range(g))
+    if cfg.cross_attn_interval:
+        axes["cross_blocks"] = stack(axes_cross_block(cfg))
+    if cfg.is_encdec:
+        axes["encoder"] = {
+            "positions": (None, "embed"),
+            "blocks": stack(axes_block(cfg, "encoder")),
+            "final_norm": L.axes_norm(cfg.norm_kind),
+        }
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Forward (training) — scan over groups
+# ---------------------------------------------------------------------------
+
+def _encode_memory(params: PyTree, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """Whisper encoder over precomputed conv-frontend frames [B, T, d]."""
+    enc = params["encoder"]
+    x = frames + enc["positions"][None, :frames.shape[1]]
+
+    def body(x, bp):
+        x, _ = apply_block(bp, x, cfg, "encoder", window=0, causal=False)
+        return x, ()
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(fn, x, enc["blocks"])
+    return L.apply_norm(enc["final_norm"], x, cfg.norm_kind)
+
+
+def forward(params: PyTree, cfg: ModelConfig, tokens: jnp.ndarray, *,
+            memory: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens [B, S] -> (logits [B, S, V], aux loss scalar)."""
+    from repro.sharding.constraints import constrain
+    seq_ax = "seq" if cfg.seq_parallel_activations else None
+    x = L.embed_tokens(params["embed"], tokens)
+    x = constrain(x, "batch", seq_ax, None)
+    if cfg.is_encdec:
+        pos_table = params["embed"]["positions"]
+        s = tokens.shape[1]
+        x = x + jnp.take(pos_table, jnp.arange(s) % pos_table.shape[0], axis=0)[None]
+        memory = _encode_memory(params, cfg, memory)
+    g = group_size(cfg)
+    ws = cfg.windows
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.arch_type == "ssm":
+        for i, bp in enumerate(params["blocks"]):
+            x, aux = apply_block(bp, x, cfg, _block_kind(cfg, i), window=ws[i])
+            aux_total += aux
+    else:
+        has_cross = bool(cfg.cross_attn_interval)
+
+        def body(carry, xs):
+            x, aux_acc = carry
+            x = constrain(x, "batch", seq_ax, None)
+            blocks = xs[:g]
+            cross = xs[g] if has_cross else None
+            for r in range(g):
+                kind = _block_kind(cfg, r)
+                x, aux = apply_block(blocks[r], x, cfg, kind, window=ws[r],
+                                     memory=memory)
+                aux_acc = aux_acc + aux
+            if has_cross:
+                x = apply_cross_block(cross, x, memory, cfg)
+            return (x, aux_acc), ()
+
+        xs = tuple(params["blocks"])
+        if has_cross:
+            xs = xs + (params["cross_blocks"],)
+        fn = jax.checkpoint(body) if cfg.remat else body
+        if cfg.scan_layers:
+            (x, aux_total), _ = jax.lax.scan(fn, (x, aux_total), xs)
+        else:
+            n_groups = cfg.num_layers // g
+            for i in range(n_groups):
+                (x, aux_total), _ = fn((x, aux_total),
+                                       jax.tree.map(lambda t: t[i], xs))
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_kind)
+    logits = L.unembed(params["embed"], x, softcap=cfg.logit_softcap)
+    return logits, aux_total

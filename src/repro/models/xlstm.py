@@ -1,0 +1,219 @@
+"""xLSTM blocks (mLSTM + sLSTM) — the [ssm] assigned arch (xlstm-125m).
+
+mLSTM (matrix memory, exponential gating) runs CHUNKWISE on TPU: intra-chunk
+a Q×Q decay-masked attention, inter-chunk a carried [B, H, Dh, Dh] matrix state
+with accumulated decay — the recurrent and parallel forms of the xLSTM paper
+fused at chunk granularity so prefill_32k never materializes S×S.
+
+sLSTM (scalar memory, non-parallelizable recurrence) is a lax.scan over time,
+kept for the layers the paper's 7:1 pattern assigns it.
+
+Numerics: exponent arguments are clipped instead of carrying the running-max
+stabilizer state; gates are computed in f32.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+PyTree = Dict
+CHUNK = 128
+_ICLIP = 8.0  # clip on the input-gate pre-activation (stabilization)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d: int, num_heads: int, *, expand: int = 2, dtype=jnp.bfloat16) -> PyTree:
+    di = expand * d
+    ks = jax.random.split(key, 7)
+    std = d ** -0.5
+    return {
+        "wq": L.truncated_normal(ks[0], (d, di), std, dtype),
+        "wk": L.truncated_normal(ks[1], (d, di), std, dtype),
+        "wv": L.truncated_normal(ks[2], (d, di), std, dtype),
+        "w_igate": L.truncated_normal(ks[3], (d, num_heads), std, jnp.float32),
+        "w_fgate": L.truncated_normal(ks[4], (d, num_heads), std, jnp.float32),
+        "b_fgate": jnp.full((num_heads,), 3.0, jnp.float32),  # start remembering
+        "b_igate": jnp.zeros((num_heads,), jnp.float32),
+        "w_ogate": L.truncated_normal(ks[5], (d, di), std, dtype),
+        "out_proj": L.truncated_normal(ks[6], (di, d), di ** -0.5, dtype),
+    }
+
+
+def axes_mlstm() -> PyTree:
+    return {"wq": ("embed", "inner"), "wk": ("embed", "inner"),
+            "wv": ("embed", "inner"), "w_igate": ("embed", None),
+            "w_fgate": ("embed", None), "b_fgate": (None,), "b_igate": (None,),
+            "w_ogate": ("embed", "inner"), "out_proj": ("inner", "embed")}
+
+
+def _mlstm_gates(p: PyTree, x: jnp.ndarray, num_heads: int):
+    """x: [..., d] -> q,k,v [..., H, Dh], log_f [..., H], log_i [..., H]."""
+    di = p["wq"].shape[1]
+    dh = di // num_heads
+    def heads(t):
+        return t.reshape(t.shape[:-1] + (num_heads, dh))
+    q = heads(x @ p["wq"])
+    k = heads(x @ p["wk"]) * (dh ** -0.5)
+    v = heads(x @ p["wv"])
+    logf = jax.nn.log_sigmoid((x.astype(jnp.float32) @ p["w_fgate"]) + p["b_fgate"])
+    logi = jnp.clip((x.astype(jnp.float32) @ p["w_igate"]) + p["b_igate"],
+                    -_ICLIP, _ICLIP)
+    o = jax.nn.sigmoid(x @ p["w_ogate"])
+    return q, k, v, logf, logi, o, dh
+
+
+def apply_mlstm(p: PyTree, x: jnp.ndarray, num_heads: int, *,
+                return_state: bool = False):
+    """Chunkwise parallel mLSTM. x: [B, S, d]."""
+    b, s, d = x.shape
+    q, k, v, logf, logi, o, dh = _mlstm_gates(p, x, num_heads)
+    qc = min(CHUNK, s)
+    assert s % qc == 0
+    nchunk = s // qc
+
+    def chunked(t):  # [B, S, ...] -> [nchunk, B, qc, ...]
+        return jnp.moveaxis(t.reshape(b, nchunk, qc, *t.shape[2:]), 1, 0)
+
+    def chunk_step(carry, inp):
+        cstate, nstate = carry                 # [B,H,Dh,Dh], [B,H,Dh]
+        q_q, k_q, v_q, lf_q, li_q = inp        # [B,qc,H,...]
+        lf_cum = jnp.cumsum(lf_q, axis=1)      # [B,qc,H]
+        total = lf_cum[:, -1]                  # [B,H]
+
+        qf = q_q.astype(jnp.float32)
+        kf = k_q.astype(jnp.float32)
+        vf = v_q.astype(jnp.float32)
+
+        # Inter-chunk: query decays state from chunk start.
+        w_inter = jnp.exp(jnp.clip(lf_cum, -60.0, 0.0))   # [B,qc,H]
+        y_inter = jnp.einsum("bqhd,bhde,bqh->bqhe", qf, cstate, w_inter)
+        n_inter = jnp.einsum("bqhd,bhd,bqh->bqh", qf, nstate, w_inter)
+
+        # Intra-chunk: decay-masked attention, j <= i.
+        # D_ij = exp(lf_cum_i - lf_cum_j + li_j)
+        expo = (lf_cum[:, :, None] - lf_cum[:, None, :] + li_q[:, None, :])
+        iidx = jnp.arange(qc)
+        causal = iidx[:, None] >= iidx[None, :]
+        expo = jnp.where(causal[None, :, :, None], jnp.clip(expo, -60.0, 30.0), -jnp.inf)
+        dmat = jnp.exp(expo)                                # [B,qc,qc,H]
+        scores = jnp.einsum("bqhd,bjhd->bqjh", qf, kf) * dmat
+        y_intra = jnp.einsum("bqjh,bjhd->bqhd", scores, vf)
+        n_intra = jnp.sum(scores, axis=2)                   # [B,qc,H]
+
+        denom = jnp.maximum(jnp.abs(n_inter + n_intra), 1.0)[..., None]
+        y = (y_inter + y_intra) / denom
+
+        # State update: C' = exp(total) C + sum_j exp(total - lf_cum_j + li_j) k_j v_j^T
+        wj = jnp.exp(jnp.clip(total[:, None] - lf_cum + li_q, -60.0, 30.0))  # [B,qc,H]
+        c_new = (jnp.exp(jnp.clip(total, -60.0, 0.0))[..., None, None] * cstate
+                 + jnp.einsum("bqhd,bqhe,bqh->bhde", kf, vf, wj))
+        n_new = (jnp.exp(jnp.clip(total, -60.0, 0.0))[..., None] * nstate
+                 + jnp.einsum("bqhd,bqh->bhd", kf, wj))
+        return (c_new, n_new), y
+
+    c0 = jnp.zeros((b, num_heads, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, num_heads, dh), jnp.float32)
+    xs = (chunked(q), chunked(k), chunked(v), chunked(logf), chunked(logi))
+    (c_f, n_f), ys = jax.lax.scan(chunk_step, (c0, n0), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, num_heads * dh)
+    out = (o * y.astype(x.dtype)) @ p["out_proj"]
+    if return_state:
+        return out, {"c": c_f, "n": n_f}
+    return out
+
+
+def init_mlstm_state(batch: int, d: int, num_heads: int, *, expand: int = 2) -> PyTree:
+    dh = expand * d // num_heads
+    return {"c": jnp.zeros((batch, num_heads, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, num_heads, dh), jnp.float32)}
+
+
+def decode_mlstm(p: PyTree, x: jnp.ndarray, cache: PyTree, num_heads: int
+                 ) -> Tuple[jnp.ndarray, PyTree]:
+    """One-token recurrent step. x: [B, 1, d]."""
+    b = x.shape[0]
+    q, k, v, logf, logi, o, dh = _mlstm_gates(p, x[:, 0], num_heads)
+    f = jnp.exp(jnp.clip(logf, -60.0, 0.0))[..., None, None]        # [B,H,1,1]
+    i = jnp.exp(logi)[..., None, None]
+    kf, vf, qf = (t.astype(jnp.float32) for t in (k, v, q))
+    c = f * cache["c"] + i * jnp.einsum("bhd,bhe->bhde", kf, vf)
+    n = f[..., 0] * cache["n"] + i[..., 0] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), 1.0)[..., None]
+    y = (num / den).reshape(b, num_heads * dh)
+    out = (o * y.astype(x.dtype)) @ p["out_proj"]
+    return out[:, None, :], {"c": c, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, d: int, num_heads: int, dtype=jnp.bfloat16) -> PyTree:
+    ks = jax.random.split(key, 3)
+    std = d ** -0.5
+    return {
+        "w_in": L.truncated_normal(ks[0], (d, 4 * d), std, jnp.float32),
+        "r_in": L.truncated_normal(ks[1], (d, 4 * d), std, jnp.float32),
+        "b_in": jnp.concatenate([jnp.zeros((2 * d,)), jnp.full((d,), 3.0),
+                                 jnp.zeros((d,))]).astype(jnp.float32),
+        "out_proj": L.truncated_normal(ks[2], (d, d), std, dtype),
+    }
+
+
+def axes_slstm() -> PyTree:
+    return {"w_in": ("embed", "inner"), "r_in": ("embed", "inner"),
+            "b_in": ("inner",), "out_proj": ("embed", "embed")}
+
+
+def _slstm_step(p: PyTree, carry, xt):
+    """Stabilized sLSTM cell. xt: [B, d] f32."""
+    c, n, h, m = carry
+    z = xt @ p["w_in"] + h @ p["r_in"] + p["b_in"]
+    zt, it, ft, ot = jnp.split(z, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(ft)
+    log_i = jnp.clip(it, -_ICLIP, _ICLIP)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_gate = jnp.exp(log_i - m_new)
+    f_gate = jnp.exp(log_f + m - m_new)
+    c_new = f_gate * c + i_gate * jnp.tanh(zt)
+    n_new = f_gate * n + i_gate
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def apply_slstm(p: PyTree, x: jnp.ndarray, num_heads: int, *,
+                return_state: bool = False):
+    b, s, d = x.shape
+    del num_heads
+    xf = x.astype(jnp.float32)
+    zeros = jnp.zeros((b, d), jnp.float32)
+    carry = (zeros, zeros, zeros, jnp.full((b, d), -1e9, jnp.float32))
+    (c, n, hl, m), hs = jax.lax.scan(lambda c, xt: _slstm_step(p, c, xt),
+                                     carry, jnp.moveaxis(xf, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    out = h @ p["out_proj"]
+    if return_state:
+        return out, {"c": c, "n": n, "h": hl, "m": m}
+    return out
+
+
+def init_slstm_state(batch: int, d: int) -> PyTree:
+    zeros = jnp.zeros((batch, d), jnp.float32)
+    return {"c": zeros, "n": zeros, "h": zeros,
+            "m": jnp.full((batch, d), -1e9, jnp.float32)}
+
+
+def decode_slstm(p: PyTree, x: jnp.ndarray, cache: PyTree
+                 ) -> Tuple[jnp.ndarray, PyTree]:
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    (c, n, h, m), out = _slstm_step(p, carry, x[:, 0].astype(jnp.float32))
+    return (out.astype(x.dtype) @ p["out_proj"])[:, None, :], \
+        {"c": c, "n": n, "h": h, "m": m}

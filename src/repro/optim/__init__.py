@@ -1,0 +1,2 @@
+"""Functional optimizers (Adam/SGD), clipping, LR schedules."""
+from repro.optim.adam import Adam, SGD, cosine_schedule  # noqa: F401

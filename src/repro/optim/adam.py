@@ -1,0 +1,113 @@
+"""Minimal functional optimizers (no optax offline).
+
+Adam/AdamW/SGD over arbitrary pytrees, plus global-norm clipping and LR
+schedules. State is a pytree-of-pytrees so it shards with the same
+PartitionSpecs as the parameters (sharding/specs.py adds ZeRO-1 style extra
+sharding for the large LM configs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray   # scalar int32
+    mu: PyTree          # first moment (like params)
+    nu: PyTree          # second moment (like params)
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = None
+    schedule: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
+
+    def init(self, params: PyTree) -> AdamState:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                         nu=jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads: PyTree, state: AdamState, params: PyTree
+               ) -> Tuple[PyTree, AdamState]:
+        """Returns (new_params, new_state)."""
+        if self.clip_norm is not None:
+            grads = clip_by_global_norm(grads, self.clip_norm)
+        step = state.step + 1
+        lr = self.lr * (self.schedule(step) if self.schedule is not None else 1.0)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state.nu, grads)
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(p, m, v):
+            mhat = m / c1
+            vhat = v / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamState(step=step, mu=mu, nu=nu)
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: float = 0.01
+    momentum: float = 0.0
+    clip_norm: Optional[float] = None
+
+    def init(self, params: PyTree):
+        if self.momentum:
+            return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return ()
+
+    def update(self, grads, state, params):
+        if self.clip_norm is not None:
+            grads = clip_by_global_norm(grads, self.clip_norm)
+        if self.momentum:
+            state = jax.tree.map(lambda s, g: self.momentum * s + g.astype(jnp.float32),
+                                 state, grads)
+            eff = state
+        else:
+            eff = grads
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - self.lr * g).astype(p.dtype),
+            params, eff)
+        return new_params, state
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+def cosine_schedule(warmup: int, total: int, min_frac: float = 0.1
+                    ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return warm * cos
+    return fn

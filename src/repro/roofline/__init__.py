@@ -1,0 +1,1 @@
+"""Roofline model: TPU v5e constants, loop-aware HLO cost analysis, records."""

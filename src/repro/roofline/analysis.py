@@ -1,0 +1,202 @@
+"""Roofline-term extraction from a compiled (dry-run) executable.
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+  compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+  memory     = HLO_bytes / (chips × HBM_bw)
+  collective = collective_bytes / (chips × link_bw)
+
+``cost_analysis`` supplies flops / bytes accessed. Collective bytes are parsed
+out of the post-SPMD HLO text: operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (async *-start variants
+counted once).
+
+NOTE on normalization: XLA's cost_analysis on the partitioned module reports
+*per-device* numbers; the roofline divides by per-chip peaks only (no extra
+chips factor), and ``MODEL_FLOPS`` (6·N·D per token, active params for MoE)
+is divided by chips to compare like with like. Both raw values are kept in the
+record so either convention can be recomputed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[16,128,4096]{2,1,0}
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+# `%x = <output-shapes> <kind>(<args>)` — XLA's text dialect does not inline
+# operand types, so operand sizes are derived from the OUTPUT shape + the
+# replica group size (all-gather output = operand × N, reduce-scatter the
+# inverse, all-reduce/all-to-all/permute are size-preserving).
+_KIND_RE = re.compile(
+    r"=\s*(?P<out>\([^)]*\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start|-done)?\s*\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of operand bytes per collective kind over the HLO module text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _KIND_RE.search(line)
+        if not m or m.group("start") == "-done":
+            continue
+        kind = m.group("kind")
+        out_shapes = m.group("out")
+        total = 0
+        for sm in _SHAPE_RE.finditer(out_shapes):
+            dtype, dims = sm.group(1), sm.group(2)
+            if dtype in _DTYPE_BYTES:
+                total += _shape_bytes(dtype, dims)
+        if m.group("start") == "-start":
+            total //= 2  # async start outputs carry (operand, dest) pairs
+        n = _group_size(line)
+        if kind == "all-gather":
+            total //= n
+        elif kind == "reduce-scatter":
+            total *= n
+        out[kind] += total
+    return out
+
+
+@dataclasses.dataclass
+class RooflineRecord:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    coll_bytes: Dict[str, int]   # per-device collective operand bytes
+    model_flops: float           # analytic 6·N_active·D (global)
+    memory_per_device: Optional[float] = None
+    extra: Optional[Dict[str, Any]] = None
+
+    @property
+    def coll_total(self) -> int:
+        return sum(self.coll_bytes.values())
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / hw.PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / hw.HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_total / hw.ICI_BW_PER_LINK
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (per-chip comparison)."""
+        if self.flops <= 0:
+            return 0.0
+        return (self.model_flops / self.chips) / self.flops
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips, "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes, "coll_bytes": self.coll_bytes,
+            "coll_total": self.coll_total, "model_flops": self.model_flops,
+            "memory_per_device": self.memory_per_device,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "extra": self.extra or {},
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic 6·N·D (training) / 2·N·D (inference), N = active params."""
+    n = cfg.active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def analyze(compiled, *, arch: str, shape, mesh_name: str, chips: int,
+            cfg, extra: Optional[Dict[str, Any]] = None) -> RooflineRecord:
+    """Primary numbers come from the loop-aware HLO analyzer (hlo_cost.py) —
+    XLA's cost_analysis counts while bodies once and under-reports scanned
+    models by the trip count. XLA's raw numbers are kept in ``extra`` and the
+    larger of the two FLOPs estimates wins (each misses different ops: ours
+    skips elementwise, XLA skips loop trips)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    from repro.roofline import hlo_cost
+    corrected = hlo_cost.analyze_text(text)
+    flops = max(xla_flops, corrected["flops"])
+    byts = max(xla_bytes, corrected["hbm_bytes"])
+    coll_corrected = {k: int(corrected[f"coll_{k}"]) for k in _COLLECTIVES}
+    coll_raw = collective_bytes(text)
+    coll = {k: max(coll_corrected[k], coll_raw[k]) for k in _COLLECTIVES}
+    extra = dict(extra or {})
+    extra.update(xla_flops=xla_flops, xla_bytes=xla_bytes,
+                 corrected_flops=corrected["flops"],
+                 corrected_bytes=corrected["hbm_bytes"],
+                 coll_raw=coll_raw)
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = float(getattr(ma, "temp_size_in_bytes", 0)
+                        + getattr(ma, "argument_size_in_bytes", 0)
+                        + getattr(ma, "output_size_in_bytes", 0)
+                        - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+    return RooflineRecord(arch=arch, shape=shape.name, mesh=mesh_name,
+                          chips=chips, flops=flops, hbm_bytes=byts,
+                          coll_bytes=coll, model_flops=model_flops(cfg, shape),
+                          memory_per_device=mem, extra=extra)

@@ -1,0 +1,9 @@
+"""TPU v5e hardware constants (per chip) for the roofline model."""
+
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW_PER_LINK = 50e9       # bytes/s per link
+HBM_BYTES = 16 * 2 ** 30     # HBM capacity per chip
+
+CHIPS_SINGLE_POD = 256
+CHIPS_MULTI_POD = 512

@@ -1,0 +1,1 @@
+"""Batched serving engine over models/decoding.py (prefill + decode loop)."""

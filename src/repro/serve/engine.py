@@ -1,0 +1,68 @@
+"""Batched serving engine: prefill once, decode greedily/with sampling.
+
+A thin, jit-compiled driver over models/decoding.py used by the serving
+example and the decode benchmarks. Requests are padded to a common prompt
+length (static shapes); generation is a lax.scan over decode steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decoding
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    cfg: ModelConfig
+    params: PyTree
+    max_len: int = 256
+
+    def __post_init__(self):
+        cfg = self.cfg
+
+        @jax.jit
+        def _prefill(params, tokens, memory):
+            return decoding.prefill(params, cfg, tokens,
+                                    max_len=self.max_len, memory=memory)
+
+        @functools.partial(jax.jit, static_argnames=("steps", "temperature"))
+        def _generate(params, cache, first_token, key, steps: int,
+                      temperature: float):
+            def body(carry, _):
+                cache, token, key = carry
+                logits, cache = decoding.decode_step(params, cfg, cache, token)
+                if temperature > 0:
+                    key, k2 = jax.random.split(key)
+                    nxt = jax.random.categorical(k2, logits / temperature)
+                else:
+                    nxt = jnp.argmax(logits, axis=-1)
+                nxt = nxt[:, None].astype(jnp.int32)
+                return (cache, nxt, key), nxt[:, 0]
+
+            (cache, _, _), toks = jax.lax.scan(body, (cache, first_token, key),
+                                               None, length=steps)
+            return jnp.moveaxis(toks, 0, 1), cache  # [B, steps]
+
+        self._prefill = _prefill
+        self._generate = _generate
+
+    def generate(self, prompts: np.ndarray, *, steps: int = 32,
+                 temperature: float = 0.0, memory: Optional[np.ndarray] = None,
+                 seed: int = 0) -> np.ndarray:
+        """prompts: [B, S] int32 -> generated tokens [B, steps]."""
+        assert prompts.shape[1] + steps <= self.max_len, "raise max_len"
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts),
+                                      jnp.asarray(memory) if memory is not None else None)
+        first = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out, _ = self._generate(self.params, cache, first,
+                                jax.random.key(seed), steps, temperature)
+        return np.asarray(out)

@@ -1,0 +1,1 @@
+"""Logical-axis sharding rules, dry-run spec builders, activation constraints."""

@@ -1,0 +1,63 @@
+"""Activation sharding constraints (mesh-aware, no-op outside a mesh).
+
+GSPMD propagates weight shardings into activations; with FSDP-sharded weight
+d_model dims ("embed" -> data) the propagation can pick batch-replicated
+layouts (observed: 34 GB/device activation saves on mixtral train_4k).
+``constrain`` pins the canonical activation layout at module boundaries:
+
+  pattern entries: "batch" -> ("pod","data")  |  "seq" -> "model" (sequence
+  parallelism) | "vocab"/"model" -> "model" | None -> replicated.
+
+Outside jit-with-mesh (CPU unit tests) it is an exact no-op.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _abstract_mesh():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    if mesh is None or not getattr(mesh, "axis_names", ()):
+        return None
+    return mesh
+
+
+def constrain(x, *pattern: Optional[str]):
+    """with_sharding_constraint(x, P(...)) resolved per the ambient mesh."""
+    mesh = _abstract_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+    def _fits(axes, dim):
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        return total > 0 and dim % total == 0
+
+    entries = []
+    for dim, p in zip(x.shape, pattern):
+        if p == "batch":
+            axes = tuple(a for a in ("pod", "data") if a in names)
+            if axes and _fits(axes, dim):
+                entries.append(axes if len(axes) > 1 else axes[0])
+            else:
+                entries.append(None)
+        elif p in ("seq", "vocab", "model", "heads", "ff"):
+            if "model" in names and _fits(("model",), dim):
+                entries.append("model")
+            else:
+                entries.append(None)
+        else:
+            entries.append(None)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*entries))
+    except Exception:
+        return x

@@ -1,0 +1,137 @@
+"""ShapeDtypeStruct + sharding builders for the multi-pod dry-run.
+
+Everything here is allocation-free: parameter/optimizer/cache trees come from
+``jax.eval_shape`` and get NamedShardings attached, so ``jit(...).lower()``
+can compile every (arch × shape × mesh) combination on a CPU host with
+``--xla_force_host_platform_device_count=512`` placeholder devices.
+
+Cache sharding: KV caches are sharded over the *sequence* dim on the `model`
+axis (kv_heads of the GQA archs are below 16 and would otherwise replicate a
+multi-GB cache per chip); recurrent states shard their inner dim.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import InputShape
+from repro.models import decoding, transformer
+from repro.models.config import ModelConfig
+from repro.optim.adam import Adam
+from repro.sharding import rules
+from repro.train import step as train_step_lib
+
+PyTree = Any
+
+
+def _attach(shapes: PyTree, shardings: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh) -> PyTree:
+    shapes = jax.eval_shape(functools.partial(transformer.init_model, cfg=cfg),
+                            jax.random.key(0))
+    axes = transformer.model_axes(cfg)
+    shardings = rules.sharding_tree(axes, shapes, mesh)
+    return _attach(shapes, shardings)
+
+
+def state_specs(cfg: ModelConfig, mesh: Mesh, optimizer: Adam) -> PyTree:
+    params = param_specs(cfg, mesh)
+    opt_shapes = jax.eval_shape(optimizer.init, params)
+    axes = transformer.model_axes(cfg)
+    mu_sh = rules.sharding_tree(axes, opt_shapes.mu, mesh)
+    nu_sh = rules.sharding_tree(axes, opt_shapes.nu, mesh)
+    opt = type(opt_shapes)(
+        step=jax.ShapeDtypeStruct((), jnp.int32,
+                                  sharding=NamedSharding(mesh, P())),
+        mu=_attach(opt_shapes.mu, mu_sh),
+        nu=_attach(opt_shapes.nu, nu_sh),
+    )
+    return train_step_lib.TrainState(
+        params=params, opt_state=opt,
+        step=jax.ShapeDtypeStruct((), jnp.int32,
+                                  sharding=NamedSharding(mesh, P())))
+
+
+def _batch_spec(mesh: Mesh, batch: int) -> Optional[Tuple[str, ...]]:
+    axes = rules.batch_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if axes and batch % size == 0:
+        return axes
+    return None
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> Dict[str, Any]:
+    """Training/prefill batch: tokens (+ modality memory stub)."""
+    b, s = shape.global_batch, shape.seq_len
+    ba = _batch_spec(mesh, b)
+    out = {"tokens": jax.ShapeDtypeStruct(
+        (b, s), jnp.int32, sharding=NamedSharding(mesh, P(ba, None)))}
+    mem_shape = None
+    if cfg.is_encdec:
+        mem_shape = (b, cfg.encoder_seq, cfg.d_model)
+    elif cfg.cross_attn_interval:
+        mem_shape = (b, cfg.num_image_tokens, cfg.d_model)
+    if mem_shape is not None:
+        out["memory"] = jax.ShapeDtypeStruct(
+            mem_shape, jnp.dtype(cfg.dtype),
+            sharding=NamedSharding(mesh, P(ba, None, None)))
+    return out
+
+
+def _cache_entry_sharding(entry_shapes: Dict, cfg: ModelConfig, mesh: Mesh,
+                          batch: int) -> Dict:
+    ba = _batch_spec(mesh, batch)
+    model_ok = "model" in mesh.shape
+    out = {}
+    for key2, s in entry_shapes.items():
+        if key2 in ("k", "v"):
+            seq = s.shape[2]
+            seq_ax = "model" if (model_ok and seq % mesh.shape["model"] == 0) else None
+            out[key2] = NamedSharding(mesh, P(ba, None, seq_ax, None))
+        elif key2 == "h" and s.ndim == 3:   # mamba state [B, di, n]
+            di = s.shape[1]
+            ax = "model" if (model_ok and di % mesh.shape["model"] == 0) else None
+            out[key2] = NamedSharding(mesh, P(ba, ax, None))
+        elif key2 == "c" and s.ndim == 4:   # mlstm state [B, H, Dh, Dh]
+            out[key2] = NamedSharding(mesh, P(ba, None, None, None))
+        else:
+            out[key2] = NamedSharding(mesh, P(ba) if s.ndim == 1 else
+                                      P(*( [ba] + [None] * (s.ndim - 1))))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> PyTree:
+    b, s = shape.global_batch, shape.seq_len
+    mem = None
+    if cfg.is_encdec:
+        mem = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))
+    elif cfg.cross_attn_interval:
+        mem = jax.ShapeDtypeStruct((b, cfg.num_image_tokens, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))
+    shapes = jax.eval_shape(
+        lambda m: decoding.init_cache(cfg, b, s, memory=m), mem)
+    ba = _batch_spec(mesh, b)
+    shardings = {"layers": [
+        _cache_entry_sharding(entry, cfg, mesh, b)
+        for entry in shapes["layers"]],
+        "pos": NamedSharding(mesh, P())}
+    if mem is not None:
+        shardings["memory"] = NamedSharding(mesh, P(ba, None, None))
+    return _attach(shapes, shardings)
+
+
+def token_spec(shape: InputShape, mesh: Mesh) -> jax.ShapeDtypeStruct:
+    b = shape.global_batch
+    ba = _batch_spec(mesh, b)
+    return jax.ShapeDtypeStruct((b, 1), jnp.int32,
+                                sharding=NamedSharding(mesh, P(ba, None)))

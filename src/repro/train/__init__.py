@@ -1,0 +1,1 @@
+"""Training step factory: LM loss, grad accumulation, gossip aggregation."""

@@ -1,0 +1,118 @@
+"""Training step factory: loss, grads, optimizer update, gossip aggregation.
+
+``make_train_step(cfg, optimizer)`` returns a pure function
+``step(state, batch) -> (state, metrics)`` suitable for jit/pjit. ``batch`` is
+{"tokens": [B, S], plus "memory" for audio/vlm archs}; next-token LM loss with
+the MoE aux loss added.
+
+``aggregation="spread"`` applies the paper's Eq. 16 as a *cross-pod gossip*:
+instead of letting pjit all-reduce gradients over the ``pod`` mesh axis every
+step, gradients stay pod-local and parameters are averaged with ring neighbors
+every K steps (core/gossip.py). This is SpreadFGL's edge-layer aggregation
+lifted to the TPU mesh — see DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.optim.adam import Adam, AdamState
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt_state: AdamState
+    step: jnp.ndarray
+
+
+def lm_loss(params: PyTree, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            aux_weight: float = 0.01) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token cross-entropy (+ MoE aux)."""
+    from repro.sharding.constraints import constrain
+    tokens = batch["tokens"]
+    logits, aux = transformer.forward(params, cfg, tokens,
+                                      memory=batch.get("memory"))
+    targets = tokens[:, 1:]
+    logits = constrain(logits[:, :-1], "batch", None, "vocab")
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    nll = constrain(nll, "batch", None)
+    loss = jnp.mean(nll)
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+def init_state(key, cfg: ModelConfig, optimizer: Adam) -> TrainState:
+    params = transformer.init_model(key, cfg)
+    return TrainState(params=params, opt_state=optimizer.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Adam, *,
+                    aggregation: str = "allreduce",
+                    gossip_every: int = 1,
+                    pod_axis: Optional[str] = None,
+                    microbatch: int = 1
+                    ) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    """aggregation: "allreduce" (classic) | "spread" (paper's Eq. 16 gossip).
+
+    With "spread", callers run the step inside shard_map over the pod axis and
+    must pass ``pod_axis``; gradients are NOT psum'd across pods — instead
+    parameters gossip with ring neighbors every ``gossip_every`` steps.
+
+    ``microbatch`` > 1 splits the batch on dim 0 into that many chunks and
+    accumulates gradients over a lax.scan — bounds peak activation memory by
+    a 1/microbatch factor at the cost of serialized steps (§Perf lever for
+    the memory-dominated training shapes).
+    """
+
+    def _grads(params, batch):
+        return jax.value_and_grad(lm_loss, has_aux=True)(params, cfg, batch)
+
+    def _accumulated_grads(params, batch):
+        n = microbatch
+        split = {k: v.reshape((n, v.shape[0] // n) + v.shape[1:])
+                 for k, v in batch.items()}
+
+        def body(carry, micro):
+            gacc, tacc, lacc, aacc = carry
+            (total, metrics), grads = _grads(params, micro)
+            gacc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                gacc, grads)
+            return (gacc, tacc + total, lacc + metrics["loss"],
+                    aacc + metrics["aux"]), ()
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gacc, total, loss, aux), _ = jax.lax.scan(
+            body, (zeros, 0.0, 0.0, 0.0), split)
+        inv = 1.0 / n
+        grads = jax.tree.map(lambda g: g * inv, gacc)
+        return (total * inv, {"loss": loss * inv, "aux": aux * inv}), grads
+
+    def step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        if microbatch > 1:
+            (total, metrics), grads = _accumulated_grads(state.params, batch)
+        else:
+            (total, metrics), grads = _grads(state.params, batch)
+        if aggregation == "spread" and pod_axis is not None:
+            from repro.core import gossip
+            params, opt_state = optimizer.update(grads, state.opt_state,
+                                                 state.params)
+            params = gossip.maybe_gossip(params, state.step, pod_axis,
+                                         every=gossip_every)
+        else:
+            params, opt_state = optimizer.update(grads, state.opt_state,
+                                                 state.params)
+        metrics = dict(metrics, total=total)
+        return TrainState(params=params, opt_state=opt_state,
+                          step=state.step + 1), metrics
+
+    return step

@@ -1,0 +1,7 @@
+"""Shared pytest config. NOTE: no XLA_FLAGS here — smoke tests and benches
+must see the host's single device; only dryrun.py forces 512."""
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: multi-device subprocess tests")

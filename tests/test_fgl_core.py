@@ -1,0 +1,235 @@
+"""Unit tests for the paper's core components (Sec. III)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import assessor as assessor_lib
+from repro.core import gnn, imputation, partition, patcher
+from repro.core.types import ClientBatch, FGLConfig
+from repro.data.synthetic_graphs import DATASETS, load_dataset, make_sbm_graph
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return load_dataset("cora", scale=0.12, seed=0)
+
+
+@pytest.fixture(scope="module")
+def batch_and_assign(graph):
+    return partition.partition_graph(graph, 6, aug_max=8, seed=0)
+
+
+class TestPartition:
+    def test_covers_all_nodes_disjointly(self, graph, batch_and_assign):
+        batch, assign = batch_and_assign
+        ids = np.asarray(batch.global_id)
+        real = ids[ids >= 0]
+        assert len(real) == graph.num_nodes          # Σ|V^ji| = n
+        assert len(np.unique(real)) == graph.num_nodes  # no shared nodes
+
+    def test_no_cross_client_edges(self, graph, batch_and_assign):
+        batch, assign = batch_and_assign
+        # every adjacency entry connects two nodes of the same client
+        for ci in range(batch.num_clients):
+            adj = np.asarray(batch.adj[ci])
+            mask = np.asarray(batch.node_mask[ci])
+            rows, cols = np.nonzero(adj)
+            assert mask[rows].all() and mask[cols].all()
+
+    def test_missing_links_counted(self, graph, batch_and_assign):
+        _, assign = batch_and_assign
+        miss = partition.count_missing_links(graph, assign)
+        assert 0 < miss < graph.num_edges
+
+    def test_balanced_sizes(self, graph, batch_and_assign):
+        batch, _ = batch_and_assign
+        sizes = np.asarray(batch.node_mask).sum(axis=1)
+        assert sizes.min() >= 1
+        assert sizes.max() <= 2.5 * sizes.mean()
+
+    def test_ring_adjacency(self):
+        a = partition.ring_adjacency(3)
+        assert a.shape == (3, 3)
+        np.testing.assert_array_equal(a, a.T)
+        assert np.all(np.diag(a) == 1.0)
+        assert a.sum() == 9  # ring of 3 == fully connected incl self
+
+    def test_train_test_masks_disjoint(self, batch_and_assign):
+        batch, _ = batch_and_assign
+        overlap = np.asarray(batch.train_mask) * np.asarray(batch.test_mask)
+        assert overlap.sum() == 0
+
+
+class TestGNN:
+    @pytest.mark.parametrize("kind", ["sage", "gcn", "gat"])
+    def test_forward_shapes_and_masking(self, kind):
+        key = jax.random.key(0)
+        n, d, c = 20, 12, 4
+        params = gnn.init_classifier(key, kind, [d, 16, c])
+        x = jax.random.normal(key, (n, d))
+        adj = (jax.random.uniform(jax.random.key(1), (n, n)) < 0.2).astype(jnp.float32)
+        adj = jnp.maximum(adj, adj.T)
+        mask = jnp.ones((n,)).at[-5:].set(0.0)
+        out = gnn.apply_classifier(params, kind, x, adj, mask)
+        assert out.shape == (n, c)
+        assert np.all(np.asarray(out[-5:]) == 0.0)  # padded rows silent
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_padded_nodes_do_not_leak(self):
+        """Changing padded-node features must not change real outputs."""
+        key = jax.random.key(0)
+        n, d, c = 16, 8, 3
+        params = gnn.init_classifier(key, "sage", [d, 8, c])
+        adj = jnp.ones((n, n)) - jnp.eye(n)
+        mask = jnp.ones((n,)).at[10:].set(0.0)
+        x1 = jax.random.normal(key, (n, d))
+        x2 = x1.at[10:].add(100.0)
+        o1 = gnn.apply_classifier(params, "sage", x1, adj, mask)
+        o2 = gnn.apply_classifier(params, "sage", x2, adj, mask)
+        np.testing.assert_allclose(np.asarray(o1[:10]), np.asarray(o2[:10]),
+                                   atol=1e-5)
+
+
+class TestImputation:
+    def test_similarity_topk_cross_subgraph_only(self):
+        m, n_pad, c, k = 3, 8, 4, 3
+        h = jax.random.normal(jax.random.key(0), (m * n_pad, c))
+        mask = jnp.ones((m * n_pad,))
+        cid = imputation.client_of_flat(m, n_pad)
+        scores, idx = imputation.similarity_topk(h, mask, cid, k, block=8)
+        idx_np = np.asarray(idx)
+        cid_np = np.asarray(cid)
+        for u in range(m * n_pad):
+            for j in range(k):
+                v = idx_np[u, j]
+                if v >= 0:
+                    assert cid_np[u] != cid_np[v], "intra-client link imputed"
+
+    def test_topk_masks_padding(self):
+        m, n_pad, c, k = 2, 6, 3, 2
+        h = jax.random.normal(jax.random.key(0), (m * n_pad, c))
+        mask = jnp.zeros((m * n_pad,)).at[:4].set(1.0)  # only client0 slots real
+        cid = imputation.client_of_flat(m, n_pad)
+        scores, idx = imputation.similarity_topk(h, mask, cid, k, block=4)
+        # real rows may only link to real slots
+        assert np.all(np.asarray(idx)[np.asarray(idx) >= 0] < 6)
+
+    def test_autoencoder_roundtrip_shapes(self):
+        c, d = 5, 17
+        ae = imputation.init_autoencoder(jax.random.key(0), c, d)
+        s = imputation.sample_noise(jax.random.key(1), 11, c)
+        x_bar, h_bar = imputation.reconstruct(ae, s)
+        assert x_bar.shape == (11, d)
+        assert h_bar.shape == (11, c)
+        np.testing.assert_allclose(np.asarray(h_bar.sum(-1)), 1.0, atol=1e-5)
+
+
+class TestAssessorLosses:
+    def setup_method(self, _):
+        self.c = 5
+        self.asr = assessor_lib.init_assessor(jax.random.key(0), self.c)
+        self.h_real = jax.nn.softmax(
+            jax.random.normal(jax.random.key(1), (13, self.c)), -1)
+        self.h_fake = jax.nn.softmax(
+            jax.random.normal(jax.random.key(2), (13, self.c)), -1)
+        self.mask = jnp.ones((13,))
+        self.e = assessor_lib.negative_mask(self.h_real, 1.0 / self.c)
+
+    def test_negative_mask_threshold(self):
+        e = np.asarray(self.e)
+        h = np.asarray(self.h_real)
+        assert ((h > 0.2) == (e > 0)).all()
+
+    def test_assessor_score_in_unit_interval(self):
+        s = assessor_lib.apply_assessor(self.asr, self.h_real)
+        assert np.all((np.asarray(s) > 0) & (np.asarray(s) < 1))
+
+    def test_assessor_loss_decreases_when_training(self):
+        """One gradient step on L_AS improves real/fake separation."""
+        from repro.optim.adam import Adam
+        opt = Adam(lr=1e-2)
+        st = opt.init(self.asr)
+        loss0 = assessor_lib.assessor_loss(self.asr, self.h_real, self.h_fake,
+                                           self.e, self.mask)
+        p = self.asr
+        for _ in range(20):
+            g = jax.grad(assessor_lib.assessor_loss)(p, self.h_real,
+                                                     self.h_fake, self.e,
+                                                     self.mask)
+            p, st = opt.update(g, st, p)
+        loss1 = assessor_lib.assessor_loss(p, self.h_real, self.h_fake,
+                                           self.e, self.mask)
+        assert float(loss1) < float(loss0)
+
+    def test_ae_loss_masks_reconstruction(self):
+        """Eq.14 reconstruction term only covers negative (e=0) attributes."""
+        ae = imputation.init_autoencoder(jax.random.key(3), self.c, 7)
+        s = imputation.sample_noise(jax.random.key(4), 13, self.c)
+        all_pos = jnp.ones_like(self.h_real)      # e=1 everywhere -> no rec term
+        l_pos = assessor_lib.autoencoder_loss(ae, self.asr, s, self.h_real,
+                                              all_pos, self.mask)
+        all_neg = jnp.zeros_like(self.h_real)     # e=0 -> pure reconstruction
+        l_neg = assessor_lib.autoencoder_loss(ae, self.asr, s, self.h_real,
+                                              all_neg, self.mask)
+        assert np.isfinite(float(l_pos)) and np.isfinite(float(l_neg))
+        # with e=0 the adversarial input is zeroed: Assor(0) constant
+        s0 = assessor_lib.apply_assessor(self.asr, jnp.zeros_like(self.h_real))
+        assert np.allclose(np.asarray(s0), np.asarray(s0)[0])
+
+
+class TestPatcher:
+    def test_fix_graphs_wires_aug_slots(self):
+        m, n_local, aug, d, c, k = 2, 4, 2, 6, 3, 2
+        n_pad = n_local + aug
+        x = jnp.zeros((m, n_pad, d))
+        adj = jnp.zeros((m, n_pad, n_pad))
+        mask = jnp.zeros((m, n_pad)).at[:, :n_local].set(1.0)
+        batch = ClientBatch(
+            x=x, adj=adj, y=-jnp.ones((m, n_pad), jnp.int32),
+            node_mask=mask, train_mask=jnp.zeros((m, n_pad)),
+            test_mask=jnp.zeros((m, n_pad)),
+            global_id=jnp.arange(m * n_pad).reshape(m, n_pad),
+            num_classes=c, aug_max=aug)
+        scores = jnp.ones((m * n_pad, k))
+        # node 0 of client 0 links to node (1, 0) -> flat 6; others invalid
+        idx = -jnp.ones((m * n_pad, k), jnp.int32)
+        idx = idx.at[0, 0].set(n_pad)  # flat id of client1 slot0
+        x_bar = jnp.arange(m * n_pad * d, dtype=jnp.float32).reshape(m * n_pad, d)
+        fixed = patcher.fix_graphs(batch, scores, idx, x_bar)
+        adj0 = np.asarray(fixed.adj[0])
+        # aug slot got connected to source node 0 symmetrically
+        aug_rows = np.nonzero(np.asarray(fixed.node_mask[0])[n_local:])[0] + n_local
+        assert len(aug_rows) == 1
+        ar = aug_rows[0]
+        assert adj0[0, ar] == 1.0 and adj0[ar, 0] == 1.0
+        np.testing.assert_allclose(np.asarray(fixed.x[0, ar]),
+                                   np.asarray(x_bar[n_pad]))
+
+    def test_clear_augmentation(self):
+        g = load_dataset("cora", scale=0.08, seed=1)
+        batch, _ = partition.partition_graph(g, 3, aug_max=4, seed=0)
+        batch = jax.tree.map(jnp.asarray, batch)
+        cleared = patcher.clear_augmentation(batch)
+        n_local = cleared.n_local_max
+        assert np.all(np.asarray(cleared.node_mask)[:, n_local:] == 0)
+
+
+class TestSyntheticData:
+    def test_deterministic(self):
+        g1 = make_sbm_graph(DATASETS["citeseer"], scale=0.1, seed=7)
+        g2 = make_sbm_graph(DATASETS["citeseer"], scale=0.1, seed=7)
+        np.testing.assert_array_equal(np.asarray(g1.x), np.asarray(g2.x))
+        np.testing.assert_array_equal(g1.senders, g2.senders)
+
+    def test_stats_match_table1_proportions(self):
+        for name, stats in DATASETS.items():
+            g = make_sbm_graph(stats, scale=0.1, seed=0)
+            assert g.num_classes == stats.num_classes
+            assert abs(g.num_nodes - 0.1 * stats.num_nodes) < 0.02 * stats.num_nodes + 200
+
+    def test_homophily_above_random(self):
+        g = make_sbm_graph(DATASETS["cora"], scale=0.2, seed=0)
+        y = np.asarray(g.y)
+        same = (y[np.asarray(g.senders)] == y[np.asarray(g.receivers)]).mean()
+        assert same > 2.0 / g.num_classes

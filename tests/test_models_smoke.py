@@ -1,0 +1,163 @@
+"""Per-architecture smoke tests (reduced configs, CPU).
+
+For each of the 10 assigned architectures: instantiate the reduced variant,
+run a forward pass + one train step (shape + finiteness asserts), and check
+prefill/decode agree with the full forward — the serving-path invariant.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data.lm_data import memory_stub
+from repro.models import decoding, transformer
+from repro.optim.adam import Adam
+from repro.train.step import init_state, lm_loss, make_train_step
+
+ARCHS = list(configs.ARCH_IDS)
+
+
+def _setup(arch, B=2, S=32):
+    cfg = configs.get_config(arch, "smoke")
+    tokens = np.asarray(jax.random.randint(jax.random.key(1), (B, S), 0,
+                                           cfg.vocab_size))
+    mem = memory_stub(cfg, B)
+    batch = {"tokens": jnp.asarray(tokens)}
+    if mem is not None:
+        batch["memory"] = jnp.asarray(mem)
+    return cfg, tokens, batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_reduced_config_limits(arch):
+    cfg = configs.get_config(arch, "smoke")
+    assert cfg.num_layers <= 2
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    assert cfg.source  # citation present
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = configs.get_config(arch, "full")
+    expected = {
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+        "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+        "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+        "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_finite(arch):
+    cfg, tokens, batch = _setup(arch)
+    params = transformer.init_model(jax.random.key(0), cfg)
+    logits, aux = jax.jit(
+        lambda p, t, m: transformer.forward(p, cfg, t, memory=m))(
+            params, batch["tokens"], batch.get("memory"))
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step_finite_and_updates(arch):
+    cfg, tokens, batch = _setup(arch)
+    opt = Adam(lr=1e-3)
+    state = init_state(jax.random.key(0), cfg, opt)
+    step = jax.jit(make_train_step(cfg, opt))
+    state2, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # parameters actually moved
+    diffs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                         state.params, state2.params)
+    assert max(jax.tree.leaves(diffs)) > 0
+    assert int(state2.step) == 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_match_forward(arch):
+    cfg, tokens, batch = _setup(arch)
+    B, S = tokens.shape
+    params = transformer.init_model(jax.random.key(0), cfg)
+    full_logits, _ = jax.jit(
+        lambda p, t, m: transformer.forward(p, cfg, t, memory=m))(
+            params, batch["tokens"], batch.get("memory"))
+    pf_logits, cache = jax.jit(
+        lambda p, t, m: decoding.prefill(p, cfg, t, max_len=S + 4, memory=m))(
+            params, jnp.asarray(tokens[:, :S - 1]), batch.get("memory"))
+    np.testing.assert_allclose(np.asarray(pf_logits),
+                               np.asarray(full_logits[:, S - 2]),
+                               atol=2e-3, rtol=2e-3)
+    dec_logits, cache2 = jax.jit(
+        lambda p, c, t: decoding.decode_step(p, cfg, c, t))(
+            params, cache, jnp.asarray(tokens[:, S - 1:S]))
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(full_logits[:, S - 1]),
+                               atol=2e-3, rtol=2e-3)
+    assert int(cache2["pos"]) == S
+
+
+def test_ring_cache_prompt_longer_than_window():
+    """Prefill with prompt > sliding window, then decode — ring buffer must
+    hold exactly the last `window` keys in slot order."""
+    cfg = configs.get_config("mixtral-8x7b", "smoke")  # window 64
+    B, S = 1, 96
+    params = transformer.init_model(jax.random.key(0), cfg)
+    tokens = jax.random.randint(jax.random.key(1), (B, S + 1), 0,
+                                cfg.vocab_size)
+    full, _ = transformer.forward(params, cfg, tokens)
+    pf, cache = decoding.prefill(params, cfg, tokens[:, :S], max_len=S + 8)
+    np.testing.assert_allclose(np.asarray(pf), np.asarray(full[:, S - 1]),
+                               atol=2e-3, rtol=2e-3)
+    dec, _ = decoding.decode_step(params, cfg, cache, tokens[:, S:S + 1])
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, S]),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_loss_decreases_over_steps():
+    """Short optimization on the smallest arch actually learns."""
+    cfg = configs.get_config("xlstm-125m", "smoke")
+    opt = Adam(lr=3e-3)
+    state = init_state(jax.random.key(0), cfg, opt)
+    step = jax.jit(make_train_step(cfg, opt))
+    from repro.data.lm_data import token_batches
+    data = token_batches(cfg, batch=4, seq_len=64, seed=0)
+    losses = []
+    for _ in range(20):
+        b = {k: jnp.asarray(v) for k, v in next(data).items()}
+        state, m = step(state, b)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2
+
+
+def test_group_size_periodicity():
+    assert transformer.group_size(configs.get_config("gemma3-12b", "full")) == 6
+    assert transformer.group_size(configs.get_config("mixtral-8x7b", "full")) == 1
+    assert transformer.group_size(configs.get_config("hymba-1.5b", "full")) == 16
+    assert transformer.group_size(
+        configs.get_config("llama-3.2-vision-11b", "full")) == 5
+
+
+def test_sub_quadratic_classification():
+    """long_500k applicability matches DESIGN.md §4."""
+    runs = {a: configs.shape_applicable(configs.get_config(a, "full"),
+                                        configs.INPUT_SHAPES["long_500k"])
+            for a in ARCHS}
+    assert runs == {
+        "mixtral-8x7b": True, "gemma3-12b": True, "hymba-1.5b": True,
+        "xlstm-125m": True,
+        "command-r-plus-104b": False, "qwen3-4b": False,
+        "llama-3.2-vision-11b": False, "whisper-medium": False,
+        "olmoe-1b-7b": False, "llama3-405b": False,
+    }

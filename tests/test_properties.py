@@ -1,0 +1,117 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gnn
+from repro.kernels import ref
+from repro.models import layers as L
+from repro.optim.adam import Adam, clip_by_global_norm, global_norm
+
+jax.config.update("jax_enable_x64", False)
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(n=st.integers(4, 40), d=st.integers(2, 24), seed=st.integers(0, 1000))
+@settings(**_SETTINGS)
+def test_normalized_adjacency_row_stochastic(n, d, seed):
+    key = jax.random.key(seed)
+    adj = (jax.random.uniform(key, (n, n)) < 0.3).astype(jnp.float32)
+    adj = jnp.maximum(adj, adj.T)
+    mask = (jax.random.uniform(jax.random.fold_in(key, 1), (n,)) < 0.8
+            ).astype(jnp.float32)
+    a = gnn.normalize_adjacency(adj, mask)
+    rows = np.asarray(jnp.sum(a, -1))
+    assert np.all(rows <= 1.0 + 1e-5)          # row sums in {0} U (0,1]
+    deg = np.asarray((adj * (mask[:, None] * mask[None, :])).sum(-1))
+    np.testing.assert_allclose(rows[deg > 0], 1.0, atol=1e-5)
+
+
+@given(s=st.integers(2, 16), d=st.sampled_from([8, 16, 32]),
+       theta=st.sampled_from([1e3, 1e4, 1e6]), seed=st.integers(0, 100))
+@settings(**_SETTINGS)
+def test_rope_preserves_norm(s, d, theta, seed):
+    x = jax.random.normal(jax.random.key(seed), (1, 2, s, d))
+    out = L.apply_rope(x, jnp.arange(s), theta)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(out), axis=-1),
+                               rtol=1e-5)
+
+
+@given(s=st.integers(1, 12), d=st.sampled_from([8, 32]), seed=st.integers(0, 50))
+@settings(**_SETTINGS)
+def test_rope_zero_position_identity(s, d, seed):
+    x = jax.random.normal(jax.random.key(seed), (1, 1, s, d))
+    out = L.apply_rope(x, jnp.zeros((s,), jnp.int32), 1e4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), atol=1e-6)
+
+
+@given(n=st.integers(1, 20), d=st.integers(2, 32), seed=st.integers(0, 100))
+@settings(**_SETTINGS)
+def test_rmsnorm_unit_rms(n, d, seed):
+    x = 5.0 * jax.random.normal(jax.random.key(seed), (n, d)) + 1.0
+    p = L.init_norm("rmsnorm", d, jnp.float32)
+    out = np.asarray(L.apply_norm(p, x, "rmsnorm"))
+    rms = np.sqrt((out ** 2).mean(-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+
+@given(seed=st.integers(0, 200), clip=st.floats(0.1, 10.0))
+@settings(**_SETTINGS)
+def test_clip_by_global_norm_bound(seed, clip):
+    key = jax.random.key(seed)
+    tree = {"a": 10 * jax.random.normal(key, (7, 3)),
+            "b": [jax.random.normal(jax.random.fold_in(key, 1), (5,))]}
+    clipped = clip_by_global_norm(tree, clip)
+    assert float(global_norm(clipped)) <= clip * (1 + 1e-4)
+
+
+@given(seed=st.integers(0, 100), steps=st.integers(1, 5))
+@settings(**_SETTINGS)
+def test_adam_descends_quadratic(seed, steps):
+    """Adam reduces a convex quadratic from any start."""
+    opt = Adam(lr=0.1)
+    target = jax.random.normal(jax.random.key(seed), (6,))
+    p = {"w": jnp.zeros((6,))}
+    st_ = opt.init(p)
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    l0 = float(loss(p))
+    for _ in range(steps * 10):
+        g = jax.grad(loss)(p)
+        p, st_ = opt.update(g, st_, p)
+    assert float(loss(p)) < l0
+
+
+@given(sq=st.integers(2, 10), skv=st.integers(2, 10), seed=st.integers(0, 50))
+@settings(**_SETTINGS)
+def test_attention_oracle_rows_are_convex_combinations(sq, skv, seed):
+    """Causal attention output lies in the convex hull of V rows."""
+    if skv < sq:
+        skv = sq
+    key = jax.random.key(seed)
+    q = jax.random.normal(key, (1, 1, sq, 8))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, skv, 8))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 1, skv, 8))
+    out = np.asarray(ref.flash_attention(q, k, v, causal=True))
+    vmin, vmax = np.asarray(v).min(), np.asarray(v).max()
+    assert out.min() >= vmin - 1e-4 and out.max() <= vmax + 1e-4
+
+
+@given(b=st.integers(1, 4), s=st.sampled_from([16, 32]), seed=st.integers(0, 30))
+@settings(max_examples=10, deadline=None)
+def test_causal_forward_prefix_invariance(b, s, seed):
+    """Changing suffix tokens never changes prefix logits (dense arch)."""
+    from repro import configs
+    from repro.models import transformer
+    cfg = configs.get_config("qwen3-4b", "smoke")
+    params = transformer.init_model(jax.random.key(0), cfg)
+    key = jax.random.key(seed)
+    t1 = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    t2 = t1.at[:, s // 2:].set(
+        jax.random.randint(jax.random.fold_in(key, 1), (b, s - s // 2), 0,
+                           cfg.vocab_size))
+    l1, _ = transformer.forward(params, cfg, t1)
+    l2, _ = transformer.forward(params, cfg, t2)
+    np.testing.assert_allclose(np.asarray(l1[:, :s // 2]),
+                               np.asarray(l2[:, :s // 2]), atol=1e-4, rtol=1e-3)
