@@ -7,14 +7,28 @@ edge-client communication a server receives W from each covered client and
 broadcasts back; on imputation rounds SpreadFGL servers additionally exchange
 parameters with their ring neighbors (Eq. 16). The paper's claim: the maximum
 per-server load drops ~N× — the single aggregation point disappears.
+
+The wall-time section measures the stacked-[N] refactor: one vmapped
+imputation round (sharded over the edge mesh when >1 device is available) vs
+the seed's sequential per-server loop (``_imputation_round_reference``) for
+N ∈ {1, 2, 4, 8} on the same host. Run as a script this emulates 8 host
+devices so the mesh actually spreads servers; via ``run.py`` it uses whatever
+devices exist.
 """
 from __future__ import annotations
+
+import os
+
+if __name__ == "__main__":  # must precede the first jax import
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
 
 import jax
 import numpy as np
 
-from benchmarks.common import fgl_setup, write_result
+from benchmarks.common import fgl_setup, timeit, write_result
 from repro.core.spreadfgl import make_fedgl, make_spreadfgl
+from repro.launch.mesh import make_edge_mesh
 
 
 def param_bytes(trainer, batch) -> int:
@@ -48,7 +62,44 @@ def main(fast: bool = False):
              / out["SpreadFGL(N=3)"]["peak_load_bytes"])
     out["peak_load_reduction"] = ratio
     print(f"  peak-load reduction: {ratio:.2f}x")
+    out["imputation_walltime"] = bench_imputation_walltime(fast=fast)
     write_result("load_balance", out)
+    return out
+
+
+def bench_imputation_walltime(fast: bool = False):
+    """Per-round wall time of the imputation round, vmapped vs sequential."""
+    n_dev = len(jax.devices())
+    print(f"[bench] imputation round wall time (vmapped [N] on {n_dev} "
+          f"device(s) vs sequential loop)")
+    _, batch, cfg = fgl_setup("cora", 8)   # 8 clients: N in {1,2,4,8} all divide
+    iters = 2 if fast else 5
+    out = {"devices": n_dev}
+
+    def impute_args(tr):
+        state = tr.init(jax.random.key(0), batch)
+        return (state.params, state.batch, state.ae_params, state.ae_opt,
+                state.as_params, state.as_opt, state.key)
+
+    for n in (1, 2, 4, 8):
+        mesh = make_edge_mesh(n) if (n > 1 and n_dev > 1) else None
+        tr_v = (make_fedgl(cfg, batch) if n == 1
+                else make_spreadfgl(cfg, batch, num_servers=n, edge_mesh=mesh))
+        args_v = impute_args(tr_v)
+        t_vmap = timeit(lambda: tr_v._impute_fn(args_v), iters=iters)
+        # Sequential baseline: the seed's per-server loop, single device.
+        tr_s = (make_fedgl(cfg, batch) if n == 1
+                else make_spreadfgl(cfg, batch, num_servers=n))
+        args_s = impute_args(tr_s)
+        seq_fn = jax.jit(tr_s._imputation_round_reference)
+        t_seq = timeit(lambda: seq_fn(args_s), iters=iters)
+        out[f"N={n}"] = {"servers": n, "mesh_devices": mesh.size if mesh else 1,
+                         "vmapped_round_us": t_vmap,
+                         "sequential_round_us": t_seq,
+                         "speedup": t_seq / t_vmap}
+        print(f"  N={n}: vmapped {t_vmap/1e3:8.1f} ms "
+              f"(mesh={mesh.size if mesh else 1})   "
+              f"sequential {t_seq/1e3:8.1f} ms   speedup {t_seq/t_vmap:.2f}x")
     return out
 
 

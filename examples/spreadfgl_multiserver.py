@@ -13,6 +13,7 @@ from repro.core.partition import partition_graph
 from repro.core.spreadfgl import make_fedgl, make_spreadfgl
 from repro.core.types import FGLConfig
 from repro.data.synthetic_graphs import DATASETS, make_sbm_graph
+from repro.launch.mesh import make_edge_mesh
 
 
 def main():
@@ -22,12 +23,16 @@ def main():
     cfg = FGLConfig(hidden_dim=32, local_rounds=4, imputation_interval=2,
                     top_k_links=4, aug_max=12)
 
+    # The [N] server axis shards across whatever devices exist (size-1 mesh on
+    # a single-device host — identical numbers, no sharding).
+    mesh = make_edge_mesh(3)
     methods = {
         "LocalFGL": LocalFGL(cfg, batch),
         "FedAvg-fusion": FedAvgFusion(cfg, batch),
         "FedSage+": FedSagePlus(cfg, batch),
         "FedGL": make_fedgl(cfg, batch),
-        "SpreadFGL (3 servers, ring)": make_spreadfgl(cfg, batch, num_servers=3),
+        "SpreadFGL (3 servers, ring)": make_spreadfgl(cfg, batch, num_servers=3,
+                                                      edge_mesh=mesh),
     }
     print(f"{'method':30s} {'best ACC':>9s} {'best F1':>9s} {'final loss':>11s}")
     for name, tr in methods.items():

@@ -1,7 +1,10 @@
 """Pytree checkpointing to .npz (no orbax offline).
 
 Flattens a pytree with '/'-joined key paths; restores into the same structure.
-Handles dataclass/NamedTuple nodes via jax.tree flattening against a template.
+Handles dataclass/NamedTuple nodes via jax.tree flattening against a template,
+including registered dataclasses like ``FGLState`` — the stacked [N]
+edge-server generator state round-trips as ordinary leaves. Typed PRNG key
+arrays are serialized via ``jax.random.key_data`` and re-wrapped on restore.
 """
 from __future__ import annotations
 
@@ -9,9 +12,15 @@ import pathlib
 from typing import Any, Dict
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 PyTree = Any
+
+
+def _is_key_array(leaf) -> bool:
+    return isinstance(leaf, jax.Array) and jnp.issubdtype(leaf.dtype,
+                                                          jax.dtypes.prng_key)
 
 
 def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
@@ -19,6 +28,8 @@ def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
     for path, leaf in leaves_with_paths:
         key = "/".join(_path_str(p) for p in path) or "_root"
+        if _is_key_array(leaf):
+            leaf = jax.random.key_data(leaf)
         flat[key] = np.asarray(leaf)
     return flat
 
@@ -50,6 +61,14 @@ def restore(path: str | pathlib.Path, template: PyTree) -> PyTree:
         if key not in flat:
             raise KeyError(f"checkpoint missing leaf {key!r}")
         arr = flat[key]
+        if _is_key_array(leaf):
+            expect_shape = tuple(jax.random.key_data(leaf).shape)
+            if tuple(arr.shape) != expect_shape:
+                raise ValueError(f"shape mismatch for {key}: "
+                                 f"{arr.shape} vs {expect_shape}")
+            leaves.append(jax.random.wrap_key_data(
+                jnp.asarray(arr), impl=jax.random.key_impl(leaf)))
+            continue
         if tuple(arr.shape) != tuple(np.shape(leaf)):
             raise ValueError(f"shape mismatch for {key}: "
                              f"{arr.shape} vs {np.shape(leaf)}")

@@ -33,6 +33,17 @@ def init_assessor(key, c: int, hidden: Sequence[int] = (128, 16)) -> PyTree:
     return {"layers": layers}
 
 
+def init_stacked_assessor(key, n_servers: int, c: int,
+                          hidden: Sequence[int] = (128, 16)) -> PyTree:
+    """N per-server assessors as one pytree with a leading [N] axis.
+
+    Server j's weights match ``init_assessor(fold_in(key, j), ...)`` so the
+    stacked layout is bit-identical to the seed's per-server list.
+    """
+    keys = jax.vmap(lambda j: jax.random.fold_in(key, j))(jnp.arange(n_servers))
+    return jax.vmap(lambda k: init_assessor(k, c, hidden))(keys)
+
+
 def apply_assessor(params: PyTree, h: jnp.ndarray) -> jnp.ndarray:
     """Score in (0,1) per node: [n, c] -> [n]."""
     z = h

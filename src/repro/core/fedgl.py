@@ -6,15 +6,21 @@ and the Eq. 15 trace regularizer + Eq. 16 neighbor aggregation is SpreadFGL
 (Sec. III-E).
 
 Layout: client classifiers are stacked on a leading [M] axis; clients are
-grouped contiguously per server ([N, M_per] reshape). Everything jits; the
-outer edge-client communication loop is a Python loop (it mutates graph
-structure on imputation rounds).
+grouped contiguously per server so a ``[N, M_per]`` reshape recovers the edge
+topology. All per-edge-server state (autoencoder, assessor, and their
+optimizer states) is likewise stacked on a leading ``[N]`` axis — there are no
+Python lists of per-server pytrees — and the whole imputation round is a
+single ``jax.vmap`` over that axis, so N servers run data-parallel instead of
+sequentially. When an edge mesh is supplied (``launch/edge_mesh.py``) the
+``[N]`` axis is placed on a JAX device mesh and the vmapped round shards
+across devices. Everything jits; the outer edge-client communication loop is
+a Python loop (it mutates graph structure on imputation rounds).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,14 +34,17 @@ from repro.optim.adam import Adam
 PyTree = Any
 
 
+@jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class FGLState:
+    """Registered pytree so the whole state checkpoints/shards as one tree."""
+
     params: PyTree        # [M, ...] stacked client classifiers
     opt_state: Any
-    ae_params: List[PyTree]    # per server (python list, N static)
-    ae_opt: List[Any]
-    as_params: List[PyTree]
-    as_opt: List[Any]
+    ae_params: PyTree     # [N, ...] stacked per-server autoencoders
+    ae_opt: Any           # [N, ...] stacked optimizer state
+    as_params: PyTree     # [N, ...] stacked per-server assessors
+    as_opt: Any
     batch: ClientBatch
     key: jax.Array
     round: int = 0
@@ -62,7 +71,7 @@ class FGLTrainer:
     def __init__(self, cfg: FGLConfig, batch: ClientBatch, server_adjacency: np.ndarray,
                  server_of_client: np.ndarray, *, aggregate_impl: str = "reference",
                  use_negative_sampling: bool = True, use_assessor: bool = True,
-                 use_imputation: bool = True):
+                 use_imputation: bool = True, edge_mesh=None):
         self.cfg = cfg
         self.num_classes = batch.num_classes
         self.n_servers = int(server_adjacency.shape[0])
@@ -82,6 +91,10 @@ class FGLTrainer:
         self.opt = Adam(lr=cfg.lr_classifier)
         self.gen_opt = Adam(lr=cfg.lr_generator)
         self.is_spread = self.n_servers > 1
+        self.edge_mesh = edge_mesh
+        if edge_mesh is not None and self.n_servers % edge_mesh.size:
+            raise ValueError(f"N={self.n_servers} servers must divide across the "
+                             f"{edge_mesh.size}-device edge mesh")
         self._local_fn = jax.jit(self._local_rounds)
         self._agg_fn = jax.jit(self._aggregate_broadcast)
         self._impute_fn = jax.jit(self._imputation_round)
@@ -96,22 +109,28 @@ class FGLTrainer:
         # Algorithm 1 line 3: all clients start from the server weights W_j.
         base = gnn.init_classifier(k_cls, cfg.gnn_kind, dims)
         params = jax.tree.map(lambda p: jnp.broadcast_to(p, (self.m,) + p.shape).copy(), base)
-        ae_params, ae_opt, as_params, as_opt = [], [], [], []
-        for j in range(self.n_servers):
-            kj = jax.random.fold_in(k_ae, j)
-            ae = imputation.init_autoencoder(kj, self.num_classes, self.feature_dim,
-                                             cfg.ae_hidden)
-            asr = assessor_lib.init_assessor(jax.random.fold_in(k_as, j),
-                                             self.num_classes, cfg.assessor_hidden)
-            ae_params.append(ae)
-            ae_opt.append(self.gen_opt.init(ae))
-            as_params.append(asr)
-            as_opt.append(self.gen_opt.init(asr))
+        ae_params = imputation.init_stacked_autoencoder(
+            k_ae, self.n_servers, self.num_classes, self.feature_dim, cfg.ae_hidden)
+        as_params = assessor_lib.init_stacked_assessor(
+            k_as, self.n_servers, self.num_classes, cfg.assessor_hidden)
+        ae_opt = jax.vmap(self.gen_opt.init)(ae_params)
+        as_opt = jax.vmap(self.gen_opt.init)(as_params)
+        ae_params, ae_opt, as_params, as_opt = self._shard_edge(
+            (ae_params, ae_opt, as_params, as_opt))
         batch = jax.tree.map(jnp.asarray, batch)
         return FGLState(params=params, opt_state=self.opt.init(params),
                         ae_params=ae_params, ae_opt=ae_opt,
                         as_params=as_params, as_opt=as_opt,
                         batch=batch, key=k_run)
+
+    def _shard_edge(self, tree: PyTree) -> PyTree:
+        """Place the leading [N] server axis of stacked state on the edge mesh."""
+        if self.edge_mesh is None:
+            return tree
+        from jax.sharding import NamedSharding, PartitionSpec
+        spec = NamedSharding(self.edge_mesh,
+                             PartitionSpec(self.edge_mesh.axis_names[0]))
+        return jax.tree.map(lambda x: jax.device_put(x, spec), tree)
 
     # -- local training (Algorithm 1 lines 8-9) ------------------------------
 
@@ -222,43 +241,76 @@ class FGLTrainer:
                                                 jax.random.split(k2, cfg.assessor_iters))
         return ae, ae_opt, asr, as_opt, s_noise
 
-    def _imputation_round(self, state_tuple):
-        """Per-server: fuse -> similarity top-k -> AE/assessor -> fix graphs."""
-        (params, batch, ae_params, ae_opt, as_params, as_opt, key) = state_tuple
+    def _server_round(self, key_j, ae, aeo, asr, aso, emb_j, mask_j, client_ids):
+        """One edge server's imputation work on its [M_per, n_pad, c] slice."""
         cfg = self.cfg
+        h_flat, flat_mask = imputation.fuse_embeddings(emb_j, mask_j)
+        ae, aeo, asr, aso, s_noise = self._train_generator(
+            key_j, ae, aeo, asr, aso, h_flat, flat_mask)
+        scores, idx = imputation.similarity_topk(
+            h_flat, flat_mask, client_ids, cfg.top_k_links)
+        x_bar = imputation.encode(ae, s_noise)              # X̅ = f(S), same S
+        return ae, aeo, asr, aso, scores, idx, x_bar
+
+    def _imputation_round(self, state_tuple):
+        """All servers at once: fuse -> top-k -> AE/assessor -> fix graphs.
+
+        The [N] server axis is a single vmap (shardable across an edge mesh);
+        per-server results are stitched back to the global flat index space by
+        :func:`patcher.stitch_server_links`.
+        """
+        (params, batch, ae_params, ae_opt, as_params, as_opt, key) = state_tuple
         emb = self._embeddings(params, batch)              # [M, n_pad, c]
         n_pad = batch.x.shape[1]
-        new_ae, new_ae_opt, new_as, new_as_opt = [], [], [], []
-        all_scores, all_idx, all_xbar = [], [], []
+        n, mp = self.n_servers, self.m_per
+        emb_g = emb.reshape((n, mp) + emb.shape[1:])       # [N, M_per, n_pad, c]
+        mask_g = batch.node_mask.reshape(n, mp, n_pad)
+        keys = jax.random.split(key, n + 1)
+        key, server_keys = keys[0], keys[1:]
+        client_ids = imputation.client_of_flat(mp, n_pad)
+        (ae_params, ae_opt, as_params, as_opt, scores, idx, x_bar) = jax.vmap(
+            self._server_round, in_axes=(0, 0, 0, 0, 0, 0, 0, None)
+        )(server_keys, ae_params, ae_opt, as_params, as_opt, emb_g, mask_g,
+          client_ids)
+        scores, idx, x_bar = patcher.stitch_server_links(scores, idx, x_bar)
+        batch = patcher.fix_graphs(batch, scores, idx, x_bar)
+        return batch, ae_params, ae_opt, as_params, as_opt, key
+
+    def _imputation_round_reference(self, state_tuple):
+        """Sequential per-server loop (tests/benchmarks only).
+
+        Preserves the pre-refactor structure — a Python loop running one
+        server at a time — but uses the same per-server key derivation as
+        :meth:`_imputation_round` (one ``split(key, N+1)`` up front, not the
+        seed's chained splits), so the two are numerically equivalent and the
+        equivalence test isolates exactly the loop→vmap change. Also the
+        baseline the load-balance benchmark times against.
+        """
+        (params, batch, ae_params, ae_opt, as_params, as_opt, key) = state_tuple
+        emb = self._embeddings(params, batch)              # [M, n_pad, c]
+        n_pad = batch.x.shape[1]
+        keys = jax.random.split(key, self.n_servers + 1)
+        key, server_keys = keys[0], keys[1:]
+        client_ids = imputation.client_of_flat(self.m_per, n_pad)
+        outs = []
         for j in range(self.n_servers):
             sl = slice(j * self.m_per, (j + 1) * self.m_per)
-            h_flat, flat_mask = imputation.fuse_embeddings(emb[sl], batch.node_mask[sl])
-            client_ids = imputation.client_of_flat(self.m_per, n_pad)
-            key, kj = jax.random.split(key)
-            ae, aeo, asr, aso, s_noise = self._train_generator(
-                kj, ae_params[j], ae_opt[j], as_params[j], as_opt[j], h_flat, flat_mask)
-            scores, idx = imputation.similarity_topk(
-                h_flat, flat_mask, client_ids, cfg.top_k_links)
-            x_bar = imputation.encode(ae, s_noise)          # X̅ = f(S), same S
-            new_ae.append(ae); new_ae_opt.append(aeo)
-            new_as.append(asr); new_as_opt.append(aso)
-            all_scores.append(scores); all_idx.append(idx); all_xbar.append(x_bar)
-
-        # Stitch per-server results back to the global client axis. Link indices
-        # are server-local flats; offset them into the global flat space.
-        scores = jnp.concatenate(all_scores, axis=0)
-        idx_parts = []
-        for j, idx in enumerate(all_idx):
-            offset = j * self.m_per * n_pad
-            idx_parts.append(jnp.where(idx >= 0, idx + offset, -1))
-        idx = jnp.concatenate(idx_parts, axis=0)
-        x_bar = jnp.concatenate(all_xbar, axis=0)
+            take_j = lambda t: jax.tree.map(lambda x: x[j], t)
+            outs.append(self._server_round(
+                server_keys[j], take_j(ae_params), take_j(ae_opt),
+                take_j(as_params), take_j(as_opt), emb[sl],
+                batch.node_mask[sl], client_ids))
+        stack = lambda i: jax.tree.map(lambda *x: jnp.stack(x), *[o[i] for o in outs])
+        ae_params, ae_opt, as_params, as_opt = (stack(i) for i in range(4))
+        scores, idx, x_bar = patcher.stitch_server_links(
+            stack(4), stack(5), stack(6))
         batch = patcher.fix_graphs(batch, scores, idx, x_bar)
-        return batch, new_ae, new_ae_opt, new_as, new_as_opt, key
+        return batch, ae_params, ae_opt, as_params, as_opt, key
 
     # -- evaluation ------------------------------------------------------------
 
     def _evaluate(self, params, batch: ClientBatch):
+        """One compiled call per round: (mean client loss, accuracy, macro-F1)."""
         def one(p, x, adj, y, node_mask, test_mask):
             logits = gnn.apply_classifier(p, self.cfg.gnn_kind, x, adj, node_mask,
                                           impl=self.aggregate_impl)
@@ -282,7 +334,8 @@ class FGLTrainer:
         f1 = 2 * precision * recall / jnp.maximum(precision + recall, 1e-9)
         seen = (tp + fn) > 0
         macro_f1 = jnp.sum(jnp.where(seen, f1, 0.0)) / jnp.maximum(jnp.sum(seen), 1.0)
-        return acc, macro_f1
+        loss = self._client_loss(params, batch) / self.m
+        return loss, acc, macro_f1
 
     # -- outer loop (Algorithm 1) ----------------------------------------------
 
@@ -301,10 +354,9 @@ class FGLTrainer:
                 state.batch, state.ae_params, state.ae_opt = batch2, ae, aeo
                 state.as_params, state.as_opt, state.key = asr, aso, key2
             state.params = self._agg_fn(state.params)
-            loss = float(self._client_loss(state.params, state.batch)) / self.m
-            acc, f1 = self._eval_fn(state.params, state.batch)
+            loss, acc, f1 = self._eval_fn(state.params, state.batch)
             history["round"].append(t_g)
-            history["loss"].append(loss)
+            history["loss"].append(float(loss))
             history["acc"].append(float(acc))
             history["f1"].append(float(f1))
             state.round = t_g + 1

@@ -106,6 +106,17 @@ def init_autoencoder(key, c: int, d: int, hidden: int = 16) -> PyTree:
     }
 
 
+def init_stacked_autoencoder(key, n_servers: int, c: int, d: int,
+                             hidden: int = 16) -> PyTree:
+    """N per-server autoencoders as one pytree with a leading [N] axis.
+
+    Server j's weights match ``init_autoencoder(fold_in(key, j), ...)`` so the
+    stacked layout is bit-identical to the seed's per-server list.
+    """
+    keys = jax.vmap(lambda j: jax.random.fold_in(key, j))(jnp.arange(n_servers))
+    return jax.vmap(lambda k: init_autoencoder(k, c, d, hidden))(keys)
+
+
 def encode(params: PyTree, s: jnp.ndarray) -> jnp.ndarray:
     """X̅ = f(S): imputed potential features."""
     h = jax.nn.relu(s @ params["enc"][0]["w"] + params["enc"][0]["b"])

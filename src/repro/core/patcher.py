@@ -21,6 +21,29 @@ import jax.numpy as jnp
 from repro.core.types import ClientBatch
 
 
+def stitch_server_links(scores: jnp.ndarray, idx: jnp.ndarray, x_bar: jnp.ndarray
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-server imputation results -> the global flat index space.
+
+    Each edge server emits link targets as *server-local* flat slots in
+    ``[0, M_per * n_pad)``; server j's slots live at global offset
+    ``j * M_per * n_pad`` (clients are grouped contiguously per server).
+
+    Args:
+      scores: [N, M_per*n_pad, k] link similarities.
+      idx: [N, M_per*n_pad, k] server-local flat targets, -1 where invalid.
+      x_bar: [N, M_per*n_pad, d] imputed features X̅.
+
+    Returns (scores [M*n_pad, k], idx [M*n_pad, k] global flats, x_bar
+    [M*n_pad, d]).
+    """
+    n, n_flat, k = idx.shape
+    offsets = (jnp.arange(n, dtype=idx.dtype) * n_flat)[:, None, None]
+    idx = jnp.where(idx >= 0, idx + offsets, -1)
+    return (scores.reshape(n * n_flat, k), idx.reshape(n * n_flat, k),
+            x_bar.reshape(n * n_flat, x_bar.shape[-1]))
+
+
 def fix_graphs(batch: ClientBatch, link_scores: jnp.ndarray, link_idx: jnp.ndarray,
                x_bar: jnp.ndarray) -> ClientBatch:
     """Apply graph fixing to every client.

@@ -35,6 +35,9 @@ def main() -> None:
     ap.add_argument("--signal-ratio", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default="")
+    ap.add_argument("--edge-mesh", action="store_true",
+                    help="shard the [N] edge-server axis across devices "
+                         "(SpreadFGL only)")
     args = ap.parse_args()
 
     graph = make_sbm_graph(DATASETS[args.dataset], scale=args.scale,
@@ -52,7 +55,12 @@ def main() -> None:
     if args.method == "FedGL":
         tr = make_fedgl(cfg, batch)
     elif args.method == "SpreadFGL":
-        tr = make_spreadfgl(cfg, batch, num_servers=args.servers)
+        mesh = None
+        if args.edge_mesh:
+            from repro.launch.mesh import make_edge_mesh
+            mesh = make_edge_mesh(args.servers)
+            print(f"[fgl] edge mesh: {mesh.size} device(s) for N={args.servers}")
+        tr = make_spreadfgl(cfg, batch, num_servers=args.servers, edge_mesh=mesh)
     else:
         tr = BASELINES[args.method](cfg, batch)
 

@@ -19,6 +19,19 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return jax.make_mesh(shape, axes)
 
 
+def make_edge_mesh(num_servers: int, *, devices: int = 0) -> Mesh:
+    """1-D mesh carrying SpreadFGL's stacked [N] edge-server axis.
+
+    Uses the largest divisor of ``num_servers`` that fits the available
+    devices, so the vmapped imputation round always shards evenly (a 1-device
+    host degenerates to a size-1 mesh, i.e. plain vmap).
+    """
+    n_dev = min(devices or len(jax.devices()), len(jax.devices()))
+    size = max(d for d in range(1, min(num_servers, n_dev) + 1)
+               if num_servers % d == 0)
+    return Mesh(jax.devices()[:size], ("edge",))
+
+
 def make_host_mesh(*, model: int = 1, data: int = 0, pod: int = 0) -> Mesh:
     """Small mesh over whatever host devices exist (tests/examples)."""
     n = len(jax.devices())
