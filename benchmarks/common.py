@@ -15,9 +15,8 @@ from typing import Callable, Dict, List
 import jax
 import numpy as np
 
-from repro.core.baselines import FedAvgFusion, FedSagePlus, LocalFGL
+from repro.core import registry
 from repro.core.partition import partition_graph
-from repro.core.spreadfgl import make_fedgl, make_spreadfgl
 from repro.core.types import FGLConfig
 from repro.data.synthetic_graphs import DATASETS, make_sbm_graph
 
@@ -40,14 +39,20 @@ def fgl_setup(dataset: str, num_clients: int, *, seed: int = 1,
     return g, batch, cfg
 
 
+# Display name -> (registry name, extra kwargs); all methods resolve through
+# repro.core.registry, the same compositions the launcher exposes.
+_REGISTRY_NAMES = {
+    "LocalFGL": ("local", {}),
+    "FedAvg-fusion": ("fedavg_fusion", {}),
+    "FedSage+": ("fedsage_plus", {}),
+    "FedGL": ("FedGL", {}),
+    "SpreadFGL": ("SpreadFGL", {"num_servers": 3}),
+}
+
+
 def make_method(name: str, cfg, batch, **kw):
-    return {
-        "LocalFGL": lambda: LocalFGL(cfg, batch, **kw),
-        "FedAvg-fusion": lambda: FedAvgFusion(cfg, batch, **kw),
-        "FedSage+": lambda: FedSagePlus(cfg, batch, **kw),
-        "FedGL": lambda: make_fedgl(cfg, batch, **kw),
-        "SpreadFGL": lambda: make_spreadfgl(cfg, batch, num_servers=3, **kw),
-    }[name]()
+    reg_name, extra = _REGISTRY_NAMES[name]
+    return registry.build(reg_name, cfg, batch, **{**extra, **kw})
 
 
 METHODS = ("LocalFGL", "FedAvg-fusion", "FedSage+", "FedGL", "SpreadFGL")

@@ -4,12 +4,13 @@
 
 Trains the paper's full pipeline (GraphSAGE clients + graph imputation
 generator + versatile assessor + negative sampling) on one edge server and
-prints accuracy per round — a 2-minute CPU demonstration of the public API.
+prints accuracy per round — a 2-minute CPU demonstration of the public
+``init / step / fit`` lifecycle.
 """
 import jax
 
+from repro.core import registry
 from repro.core.partition import count_missing_links, partition_graph
-from repro.core.spreadfgl import make_fedgl
 from repro.core.types import FGLConfig
 from repro.data.synthetic_graphs import DATASETS, make_sbm_graph
 
@@ -26,16 +27,28 @@ def main():
     print(f"deleted cross-client links: {count_missing_links(graph, assign)}")
 
     # 2. FedGL (Sec. III-B): one edge server, imputation every K=2 rounds.
+    #    Every named method is a strategy composition in the registry.
     cfg = FGLConfig(hidden_dim=32, local_rounds=4, imputation_interval=2,
                     top_k_links=4, aug_max=12)
-    trainer = make_fedgl(cfg, batch)
+    trainer = registry.build("FedGL", cfg, batch)
 
-    # 3. Train (Algorithm 1) and report.
-    state, hist = trainer.fit(jax.random.key(0), batch, rounds=10)
-    for r, (loss, acc, f1) in enumerate(zip(hist["loss"], hist["acc"],
-                                            hist["f1"])):
-        print(f"round {r:2d}  loss={loss:7.4f}  acc={acc:.3f}  f1={f1:.3f}")
-    print(f"best accuracy: {max(hist['acc']):.3f}")
+    # 3. Drive Algorithm 1 round by round: init -> step -> step -> ...
+    #    step() returns metrics as device arrays; we sync each round here
+    #    because we print each round (fit() below syncs only once).
+    state = trainer.init(jax.random.key(0), batch)
+    best = 0.0
+    for _ in range(4):
+        state, m = trainer.step(state)
+        best = max(best, float(m["acc"]))
+        print(f"round {m['round']:2d}  loss={float(m['loss']):7.4f}  "
+              f"acc={float(m['acc']):.3f}  f1={float(m['f1']):.3f}")
+
+    # 4. fit() is the same loop, picking up exactly where `state` stopped.
+    state, hist = trainer.fit(state=state, rounds=6)
+    for i, r in enumerate(hist["round"]):
+        print(f"round {r:2d}  loss={hist['loss'][i]:7.4f}  "
+              f"acc={hist['acc'][i]:.3f}  f1={hist['f1'][i]:.3f}")
+    print(f"best accuracy: {max([best] + hist['acc']):.3f}")
 
 
 if __name__ == "__main__":

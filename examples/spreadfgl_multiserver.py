@@ -8,9 +8,8 @@ and the three baselines of Sec. IV-A on the same partition.
 """
 import jax
 
-from repro.core.baselines import FedAvgFusion, FedSagePlus, LocalFGL
+from repro.core import registry
 from repro.core.partition import partition_graph
-from repro.core.spreadfgl import make_fedgl, make_spreadfgl
 from repro.core.types import FGLConfig
 from repro.data.synthetic_graphs import DATASETS, make_sbm_graph
 from repro.launch.mesh import make_edge_mesh
@@ -24,15 +23,16 @@ def main():
                     top_k_links=4, aug_max=12)
 
     # The [N] server axis shards across whatever devices exist (size-1 mesh on
-    # a single-device host — identical numbers, no sharding).
+    # a single-device host — identical numbers, no sharding). Every method is
+    # a registered strategy composition.
     mesh = make_edge_mesh(3)
     methods = {
-        "LocalFGL": LocalFGL(cfg, batch),
-        "FedAvg-fusion": FedAvgFusion(cfg, batch),
-        "FedSage+": FedSagePlus(cfg, batch),
-        "FedGL": make_fedgl(cfg, batch),
-        "SpreadFGL (3 servers, ring)": make_spreadfgl(cfg, batch, num_servers=3,
-                                                      edge_mesh=mesh),
+        "LocalFGL": registry.build("local", cfg, batch),
+        "FedAvg-fusion": registry.build("fedavg_fusion", cfg, batch),
+        "FedSage+": registry.build("fedsage_plus", cfg, batch),
+        "FedGL": registry.build("FedGL", cfg, batch),
+        "SpreadFGL (3 servers, ring)": registry.build(
+            "SpreadFGL", cfg, batch, num_servers=3, edge_mesh=mesh),
     }
     print(f"{'method':30s} {'best ACC':>9s} {'best F1':>9s} {'final loss':>11s}")
     for name, tr in methods.items():

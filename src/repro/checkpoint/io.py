@@ -5,6 +5,11 @@ Handles dataclass/NamedTuple nodes via jax.tree flattening against a template,
 including registered dataclasses like ``FGLState`` — the stacked [N]
 edge-server generator state round-trips as ordinary leaves. Typed PRNG key
 arrays are serialized via ``jax.random.key_data`` and re-wrapped on restore.
+
+A restored ``FGLState`` is directly resumable: Python-scalar leaves in the
+template (e.g. ``FGLState.round``) come back as Python scalars, so
+``trainer.fit(state=io.restore(path, trainer.init(key, batch)))`` continues
+Algorithm 1 at the checkpointed round with the imputation schedule intact.
 """
 from __future__ import annotations
 
@@ -72,5 +77,8 @@ def restore(path: str | pathlib.Path, template: PyTree) -> PyTree:
         if tuple(arr.shape) != tuple(np.shape(leaf)):
             raise ValueError(f"shape mismatch for {key}: "
                              f"{arr.shape} vs {np.shape(leaf)}")
-        leaves.append(arr.astype(np.asarray(leaf).dtype))
+        if isinstance(leaf, (int, float)) and not isinstance(leaf, bool):
+            leaves.append(type(leaf)(arr))   # python scalar stays python scalar
+        else:
+            leaves.append(arr.astype(np.asarray(leaf).dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,125 +1,50 @@
-"""Comparison algorithms of Sec. IV-A.
+"""Comparison algorithms of Sec. IV-A as pure strategy compositions.
 
-- LocalFGL: each client trains its classifier alone (no aggregation, no fixing).
+No subclassing, no overridden engine internals — each baseline is just a
+different (Topology, Aggregator, ImputationStrategy) triple handed to the
+shared :class:`~repro.core.fedgl.FGLTrainer`:
+
+- LocalFGL: each client trains its classifier alone — identity aggregation,
+  no graph fixing.
 - FedAvg-fusion: FedAvg aggregation of client GNNs, no link imputation.
 - FedSagePlus: FedAvg + a *local* linear neighbor generator per client
-  (Zhang et al., NeurIPS'21 style): a linear predictor maps a node's feature to
-  a synthetic neighbor feature, trained on the client's own held-out local
-  neighborhoods — no cross-client information flow, which is exactly the
-  limitation FedGL/SpreadFGL address (Fig. 1 middle vs right).
+  (Zhang et al., NeurIPS'21 style) — no cross-client information flow, which
+  is exactly the limitation FedGL/SpreadFGL address (Fig. 1 middle vs right).
+
+All three are registered in :mod:`repro.core.registry` under the names the
+``fgl_train`` launcher uses.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import gnn
-from repro.core.fedgl import FGLTrainer, _cross_entropy
+from repro.core import strategies as S
+from repro.core.fedgl import FGLTrainer
+from repro.core.registry import register
 from repro.core.types import ClientBatch, FGLConfig
-from repro.optim.adam import Adam
-
-PyTree = Any
 
 
-class LocalFGL(FGLTrainer):
-    """Local training only: skip aggregation and imputation."""
-
-    def __init__(self, cfg: FGLConfig, batch: ClientBatch, **kw):
-        m = batch.num_clients
-        adj = np.ones((1, 1), dtype=np.float32)
-        cfg = dataclasses.replace(cfg, num_edge_servers=1, clients_per_server=m)
-        super().__init__(cfg, batch, adj, np.zeros(m, np.int32),
-                         use_imputation=False, **kw)
-
-    def _aggregate_broadcast(self, params):
-        return params  # never aggregate
+@register("local")
+def LocalFGL(cfg: FGLConfig, batch: ClientBatch, **kw) -> FGLTrainer:
+    """Local training only: never aggregate, never impute."""
+    return FGLTrainer(cfg, batch, topology=S.StarTopology(),
+                      aggregator=S.IdentityAggregator(),
+                      imputation=S.NoImputation(), **kw)
 
 
-class FedAvgFusion(FGLTrainer):
+@register("fedavg_fusion")
+def FedAvgFusion(cfg: FGLConfig, batch: ClientBatch, **kw) -> FGLTrainer:
     """Classic FedAvg over client GNNs (no imputation generator)."""
-
-    def __init__(self, cfg: FGLConfig, batch: ClientBatch, **kw):
-        m = batch.num_clients
-        adj = np.ones((1, 1), dtype=np.float32)
-        cfg = dataclasses.replace(cfg, num_edge_servers=1, clients_per_server=m)
-        super().__init__(cfg, batch, adj, np.zeros(m, np.int32),
-                         use_imputation=False, **kw)
+    return FGLTrainer(cfg, batch, topology=S.StarTopology(),
+                      aggregator=S.FedAvgAggregator(),
+                      imputation=S.NoImputation(), **kw)
 
 
-class FedSagePlus(FGLTrainer):
+@register("fedsage_plus")
+def FedSagePlus(cfg: FGLConfig, batch: ClientBatch, *, gen_steps: int = 20,
+                **kw) -> FGLTrainer:
     """FedAvg + local linear neighbor generation (no global information flow)."""
-
-    def __init__(self, cfg: FGLConfig, batch: ClientBatch, *, gen_steps: int = 20, **kw):
-        m = batch.num_clients
-        adj = np.ones((1, 1), dtype=np.float32)
-        cfg = dataclasses.replace(cfg, num_edge_servers=1, clients_per_server=m)
-        super().__init__(cfg, batch, adj, np.zeros(m, np.int32),
-                         use_imputation=True, **kw)
-        self.gen_steps = gen_steps
-        self._gen_fn = jax.jit(self._run_local_generation)
-
-    # Replace the global imputation round with purely local generation.
-    def _imputation_round(self, state_tuple):
-        (params, batch, ae_params, ae_opt, as_params, as_opt, key) = state_tuple
-        key, kg = jax.random.split(key)
-        batch = self._gen_fn(kg, batch)
-        return batch, ae_params, ae_opt, as_params, as_opt, key
-
-    def _run_local_generation(self, key, batch: ClientBatch) -> ClientBatch:
-        """Per client: train x -> mean(neighbor x) linear predictor, then append
-        one generated neighbor for each of the aug_max highest-degree nodes."""
-        d = batch.x.shape[-1]
-        n_pad = batch.n_pad
-        n_local = batch.n_local_max
-        aug = batch.aug_max
-        opt = Adam(lr=1e-2)
-
-        def per_client(k, x, adjm, node_mask):
-            a = adjm[:n_local, :n_local] * (node_mask[:n_local, None] *
-                                            node_mask[None, :n_local])
-            deg = jnp.sum(a, axis=-1)
-            target = (a @ x[:n_local]) / jnp.maximum(deg[:, None], 1.0)
-            w = jnp.zeros((d, d), jnp.float32)
-            b = jnp.zeros((d,), jnp.float32)
-
-            def loss_fn(p):
-                pred = x[:n_local] @ p["w"] + p["b"]
-                mask = (deg > 0).astype(x.dtype)
-                return jnp.sum(jnp.square(pred - target) * mask[:, None]) / jnp.maximum(
-                    jnp.sum(mask), 1.0)
-
-            p = {"w": w, "b": b}
-            st = opt.init(p)
-
-            def step(carry, _):
-                p, st = carry
-                g = jax.grad(loss_fn)(p)
-                p, st = opt.update(g, st, p)
-                return (p, st), ()
-            (p, _), _ = jax.lax.scan(step, (p, st), None, length=self.gen_steps)
-
-            # Highest-degree real nodes get one synthetic neighbor each.
-            score = jnp.where(node_mask[:n_local] > 0, deg, -jnp.inf)
-            _, src = jax.lax.top_k(score, aug)
-            feats = x[src] @ p["w"] + p["b"]
-            ok = jnp.isfinite(score[src]).astype(x.dtype)
-            aug_rows = n_local + jnp.arange(aug)
-            x = x.at[aug_rows].set(feats * ok[:, None])
-            adjm = adjm.at[n_local:, :].set(0.0)
-            adjm = adjm.at[:, n_local:].set(0.0)
-            adjm = adjm.at[src, aug_rows].set(ok)
-            adjm = adjm.at[aug_rows, src].set(ok)
-            node_mask = node_mask.at[aug_rows].set(ok)
-            return x, adjm, node_mask
-
-        keys = jax.random.split(key, batch.num_clients)
-        x, adjm, node_mask = jax.vmap(per_client)(keys, batch.x, batch.adj,
-                                                  batch.node_mask)
-        return batch.replace(x=x, adj=adjm, node_mask=node_mask)
+    return FGLTrainer(cfg, batch, topology=S.StarTopology(),
+                      aggregator=S.FedAvgAggregator(),
+                      imputation=S.LocalGenImputation(gen_steps=gen_steps), **kw)
 
 
 REGISTRY = {

@@ -1,20 +1,36 @@
-"""FedGL / SpreadFGL training engine (Algorithm 1).
+"""FGL training engine (Algorithm 1) with an explicit state lifecycle.
 
-One engine covers both frameworks: ``num_edge_servers == 1`` with a trivial
-adjacency is FedGL (Sec. III-B); ``num_edge_servers > 1`` with a ring adjacency
-and the Eq. 15 trace regularizer + Eq. 16 neighbor aggregation is SpreadFGL
-(Sec. III-E).
+One engine covers every framework in the repo; the variation axes are
+injected strategies (:mod:`repro.core.strategies`): a ``Topology`` maps
+clients onto edge servers, an ``Aggregator`` combines client classifiers each
+round, and an ``ImputationStrategy`` runs the every-K graph-fixing round.
+``FedGL`` is star + FedAvg + the SpreadFGL generator; ``SpreadFGL`` is ring +
+Eq. 16 + the generator; the Sec. IV-A baselines are other compositions (see
+:mod:`repro.core.registry`).
+
+Lifecycle::
+
+    state = trainer.init(key, batch)        # fresh FGLState at round 0
+    state, metrics = trainer.step(state)    # ONE global round of Algorithm 1
+    state, history = trainer.fit(key, batch, rounds=30)   # thin step() loop
+    state, history = trainer.fit(state=restored, rounds=10)  # true resume
+
+``fit(state=...)`` continues at ``state.round`` — checkpoints written with
+:mod:`repro.checkpoint.io` round-trip into an identical continuation (the
+imputation schedule keys off the absolute round index). Per-round metrics
+are accumulated as device arrays and fetched once at the end of ``fit`` —
+no blocking host sync inside the loop.
 
 Layout: client classifiers are stacked on a leading [M] axis; clients are
 grouped contiguously per server so a ``[N, M_per]`` reshape recovers the edge
 topology. All per-edge-server state (autoencoder, assessor, and their
 optimizer states) is likewise stacked on a leading ``[N]`` axis — there are no
 Python lists of per-server pytrees — and the whole imputation round is a
-single ``jax.vmap`` over that axis, so N servers run data-parallel instead of
-sequentially. When an edge mesh is supplied (``launch/edge_mesh.py``) the
-``[N]`` axis is placed on a JAX device mesh and the vmapped round shards
-across devices. Everything jits; the outer edge-client communication loop is
-a Python loop (it mutates graph structure on imputation rounds).
+single ``jax.vmap`` over that axis. When an edge mesh is supplied
+(``launch/edge_mesh.py``) the ``[N]`` axis is placed on a JAX device mesh and
+the vmapped round shards across devices. Everything jits; the outer
+edge-client communication loop is a Python loop (it mutates graph structure
+on imputation rounds).
 """
 from __future__ import annotations
 
@@ -27,7 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import assessor as assessor_lib
-from repro.core import gnn, imputation, patcher
+from repro.core import gnn, imputation, strategies
 from repro.core.types import ClientBatch, FGLConfig
 from repro.optim.adam import Adam
 
@@ -37,7 +53,12 @@ PyTree = Any
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class FGLState:
-    """Registered pytree so the whole state checkpoints/shards as one tree."""
+    """The full Algorithm 1 state, threaded through ``step()`` as one pytree.
+
+    Registered dataclass so the whole state jits, checkpoints, and shards as
+    a single tree — the imputation round takes and returns ``FGLState``
+    directly (no positional tuples).
+    """
 
     params: PyTree        # [M, ...] stacked client classifiers
     opt_state: Any
@@ -66,43 +87,55 @@ def _trace_reg(params: PyTree) -> jnp.ndarray:
 
 
 class FGLTrainer:
-    """Drives Algorithm 1 for a fixed client batch."""
+    """Drives Algorithm 1 for a fixed client batch, one strategy per axis."""
 
-    def __init__(self, cfg: FGLConfig, batch: ClientBatch, server_adjacency: np.ndarray,
-                 server_of_client: np.ndarray, *, aggregate_impl: str = "reference",
+    def __init__(self, cfg: FGLConfig, batch: ClientBatch,
+                 *, topology: Optional[strategies.Topology] = None,
+                 aggregator: Optional[strategies.Aggregator] = None,
+                 imputation: Optional[strategies.ImputationStrategy] = None,
+                 aggregate_impl: str = "reference",
                  use_negative_sampling: bool = True, use_assessor: bool = True,
-                 use_imputation: bool = True, edge_mesh=None):
-        self.cfg = cfg
-        self.num_classes = batch.num_classes
-        self.n_servers = int(server_adjacency.shape[0])
+                 edge_mesh=None):
         self.m = batch.num_clients
-        if self.m % self.n_servers:
-            raise ValueError("clients must split evenly across servers")
-        self.m_per = self.m // self.n_servers
+        self.topology = topology if topology is not None else strategies.StarTopology()
+        layout = self.topology.build(self.m)
+        self.n_servers = layout.num_servers
+        self.m_per = layout.clients_per_server
         expected = np.repeat(np.arange(self.n_servers), self.m_per)
-        if not np.array_equal(np.asarray(server_of_client), expected):
+        if not np.array_equal(np.asarray(layout.server_of_client), expected):
             raise ValueError("clients must be grouped contiguously per server")
-        self.adj_servers = jnp.asarray(server_adjacency, jnp.float32)
+        self.cfg = cfg = dataclasses.replace(
+            cfg, num_edge_servers=self.n_servers, clients_per_server=self.m_per)
+        self.is_spread = self.n_servers > 1
+        self.aggregator = aggregator if aggregator is not None else (
+            strategies.NeighborAggregator() if self.is_spread
+            else strategies.FedAvgAggregator())
+        self.imputation = (imputation if imputation is not None
+                           else strategies.SpreadImputation())
+
+        self.num_classes = batch.num_classes
+        self.adj_servers = jnp.asarray(layout.adjacency, jnp.float32)
         self.feature_dim = batch.x.shape[-1]
         self.aggregate_impl = aggregate_impl
         self.use_ns = use_negative_sampling
         self.use_assessor = use_assessor
-        self.use_imputation = use_imputation
         self.opt = Adam(lr=cfg.lr_classifier)
         self.gen_opt = Adam(lr=cfg.lr_generator)
-        self.is_spread = self.n_servers > 1
         self.edge_mesh = edge_mesh
         if edge_mesh is not None and self.n_servers % edge_mesh.size:
             raise ValueError(f"N={self.n_servers} servers must divide across the "
                              f"{edge_mesh.size}-device edge mesh")
         self._local_fn = jax.jit(self._local_rounds)
-        self._agg_fn = jax.jit(self._aggregate_broadcast)
-        self._impute_fn = jax.jit(self._imputation_round)
+        self._agg_fn = jax.jit(functools.partial(
+            self.aggregator.aggregate, adj=self.adj_servers,
+            num_servers=self.n_servers, m_per=self.m_per))
+        self._impute_fn = jax.jit(functools.partial(self.imputation.impute, self))
         self._eval_fn = jax.jit(self._evaluate)
 
     # -- initialization ------------------------------------------------------
 
     def init(self, key: jax.Array, batch: ClientBatch) -> FGLState:
+        """Algorithm 1 lines 1-5: a fresh ``FGLState`` at round 0."""
         cfg = self.cfg
         dims = [self.feature_dim] + [cfg.hidden_dim] * (cfg.num_layers - 1) + [self.num_classes]
         k_cls, k_ae, k_as, k_run = jax.random.split(key, 4)
@@ -156,26 +189,13 @@ class FGLTrainer:
                                               length=self.cfg.local_rounds)
         return params, opt_state
 
-    # -- aggregation (FedAvg / Eq. 16) ----------------------------------------
+    # -- aggregation (strategy) ----------------------------------------------
 
-    def _aggregate_broadcast(self, params: PyTree) -> PyTree:
-        n, mp = self.n_servers, self.m_per
+    def aggregate(self, params: PyTree) -> PyTree:
+        """Apply this trainer's Aggregator to stacked client classifiers."""
+        return self._agg_fn(params)
 
-        def agg(leaf):
-            grouped = leaf.reshape((n, mp) + leaf.shape[1:])
-            client_sum = jnp.sum(grouped, axis=1)             # [N, ...]
-            if self.is_spread:
-                # Eq. 16: W_j = sum_r a_rj * sum_i W_(r,i) / sum_r a_rj M_r
-                weights = self.adj_servers  # a_rj, rows r cols j
-                num = jnp.einsum("rj,r...->j...", weights, client_sum)
-                den = jnp.sum(weights, axis=0) * mp           # [N]
-                w = num / den.reshape((n,) + (1,) * (leaf.ndim - 1))
-            else:
-                w = client_sum / mp
-            return jnp.repeat(w, mp, axis=0)                   # broadcast to clients
-        return jax.tree.map(agg, params)
-
-    # -- imputation + graph fixing (Algorithm 1 lines 11-24) ------------------
+    # -- imputation helpers shared by the strategies --------------------------
 
     def _embeddings(self, params, batch: ClientBatch) -> jnp.ndarray:
         def one(p, x, adj, mask):
@@ -252,60 +272,13 @@ class FGLTrainer:
         x_bar = imputation.encode(ae, s_noise)              # X̅ = f(S), same S
         return ae, aeo, asr, aso, scores, idx, x_bar
 
-    def _imputation_round(self, state_tuple):
-        """All servers at once: fuse -> top-k -> AE/assessor -> fix graphs.
+    def _imputation_round_reference(self, state: FGLState) -> FGLState:
+        """Sequential oracle of the vmapped generator round (tests/benchmarks).
 
-        The [N] server axis is a single vmap (shardable across an edge mesh);
-        per-server results are stitched back to the global flat index space by
-        :func:`patcher.stitch_server_links`.
+        Only meaningful when this trainer's imputation strategy exposes a
+        reference implementation (``SpreadImputation`` does).
         """
-        (params, batch, ae_params, ae_opt, as_params, as_opt, key) = state_tuple
-        emb = self._embeddings(params, batch)              # [M, n_pad, c]
-        n_pad = batch.x.shape[1]
-        n, mp = self.n_servers, self.m_per
-        emb_g = emb.reshape((n, mp) + emb.shape[1:])       # [N, M_per, n_pad, c]
-        mask_g = batch.node_mask.reshape(n, mp, n_pad)
-        keys = jax.random.split(key, n + 1)
-        key, server_keys = keys[0], keys[1:]
-        client_ids = imputation.client_of_flat(mp, n_pad)
-        (ae_params, ae_opt, as_params, as_opt, scores, idx, x_bar) = jax.vmap(
-            self._server_round, in_axes=(0, 0, 0, 0, 0, 0, 0, None)
-        )(server_keys, ae_params, ae_opt, as_params, as_opt, emb_g, mask_g,
-          client_ids)
-        scores, idx, x_bar = patcher.stitch_server_links(scores, idx, x_bar)
-        batch = patcher.fix_graphs(batch, scores, idx, x_bar)
-        return batch, ae_params, ae_opt, as_params, as_opt, key
-
-    def _imputation_round_reference(self, state_tuple):
-        """Sequential per-server loop (tests/benchmarks only).
-
-        Preserves the pre-refactor structure — a Python loop running one
-        server at a time — but uses the same per-server key derivation as
-        :meth:`_imputation_round` (one ``split(key, N+1)`` up front, not the
-        seed's chained splits), so the two are numerically equivalent and the
-        equivalence test isolates exactly the loop→vmap change. Also the
-        baseline the load-balance benchmark times against.
-        """
-        (params, batch, ae_params, ae_opt, as_params, as_opt, key) = state_tuple
-        emb = self._embeddings(params, batch)              # [M, n_pad, c]
-        n_pad = batch.x.shape[1]
-        keys = jax.random.split(key, self.n_servers + 1)
-        key, server_keys = keys[0], keys[1:]
-        client_ids = imputation.client_of_flat(self.m_per, n_pad)
-        outs = []
-        for j in range(self.n_servers):
-            sl = slice(j * self.m_per, (j + 1) * self.m_per)
-            take_j = lambda t: jax.tree.map(lambda x: x[j], t)
-            outs.append(self._server_round(
-                server_keys[j], take_j(ae_params), take_j(ae_opt),
-                take_j(as_params), take_j(as_opt), emb[sl],
-                batch.node_mask[sl], client_ids))
-        stack = lambda i: jax.tree.map(lambda *x: jnp.stack(x), *[o[i] for o in outs])
-        ae_params, ae_opt, as_params, as_opt = (stack(i) for i in range(4))
-        scores, idx, x_bar = patcher.stitch_server_links(
-            stack(4), stack(5), stack(6))
-        batch = patcher.fix_graphs(batch, scores, idx, x_bar)
-        return batch, ae_params, ae_opt, as_params, as_opt, key
+        return self.imputation.impute_reference(self, state)
 
     # -- evaluation ------------------------------------------------------------
 
@@ -337,27 +310,69 @@ class FGLTrainer:
         loss = self._client_loss(params, batch) / self.m
         return loss, acc, macro_f1
 
+    def evaluate(self, state: FGLState) -> Dict[str, jnp.ndarray]:
+        """Metrics of the current state (device arrays, no host sync)."""
+        loss, acc, f1 = self._eval_fn(state.params, state.batch)
+        return {"loss": loss, "acc": acc, "f1": f1}
+
     # -- outer loop (Algorithm 1) ----------------------------------------------
 
-    def fit(self, key: jax.Array, batch: ClientBatch, *, rounds: Optional[int] = None
+    def step(self, state: FGLState) -> Tuple[FGLState, Dict[str, Any]]:
+        """One global round of Algorithm 1 (lines 6-26).
+
+        Local training, the strategy's imputation round when the absolute
+        round index hits the every-K schedule, aggregation, then evaluation.
+        Returns a new state at ``round + 1`` and metrics as device arrays
+        (``{"round", "loss", "acc", "f1"}``) — callers decide when to sync.
+        """
+        t = int(state.round)
+        state = dataclasses.replace(state)   # never mutate the caller's state
+        state.params, state.opt_state = self._local_fn(
+            state.params, state.opt_state, state.batch)
+        if self.imputation.active and (t % self.cfg.imputation_interval == 0):
+            state = self._impute_fn(state)
+        state.params = self._agg_fn(state.params)
+        loss, acc, f1 = self._eval_fn(state.params, state.batch)
+        state.round = t + 1
+        return state, {"round": t, "loss": loss, "acc": acc, "f1": f1}
+
+    def fit(self, key: Optional[jax.Array] = None,
+            batch: Optional[ClientBatch] = None, *,
+            state: Optional[FGLState] = None, rounds: Optional[int] = None
             ) -> Tuple[FGLState, Dict[str, list]]:
-        state = self.init(key, batch)
-        history: Dict[str, list] = {"round": [], "loss": [], "acc": [], "f1": []}
+        """Run ``rounds`` global rounds (default ``cfg.global_rounds``).
+
+        Either pass ``(key, batch)`` for a fresh run, or ``state=`` (e.g. a
+        checkpoint restored via :func:`repro.checkpoint.io.restore`) to
+        resume — the loop continues at ``state.round`` with the imputation
+        schedule intact. Metrics stay on device for the whole loop and are
+        fetched with a single transfer at the end.
+        """
+        if state is None:
+            if key is None or batch is None:
+                raise ValueError("fit() needs (key, batch) for a fresh run "
+                                 "or state= to resume")
+            state = self.init(key, batch)
+        else:
+            if key is not None or batch is not None:
+                raise ValueError("fit(state=...) resumes from the state's own "
+                                 "key/batch; do not also pass key or batch")
+            state = dataclasses.replace(state, round=int(state.round))
+            # A restored checkpoint holds host arrays: put the stacked [N]
+            # generator state back on the edge mesh before the vmapped round.
+            (state.ae_params, state.ae_opt, state.as_params,
+             state.as_opt) = self._shard_edge(
+                (state.ae_params, state.ae_opt, state.as_params, state.as_opt))
         rounds = rounds if rounds is not None else self.cfg.global_rounds
-        for t_g in range(rounds):
-            params, opt_state = self._local_fn(state.params, state.opt_state, state.batch)
-            state.params, state.opt_state = params, opt_state
-            if self.use_imputation and (t_g % self.cfg.imputation_interval == 0):
-                (batch2, ae, aeo, asr, aso, key2) = self._impute_fn(
-                    (state.params, state.batch, state.ae_params, state.ae_opt,
-                     state.as_params, state.as_opt, state.key))
-                state.batch, state.ae_params, state.ae_opt = batch2, ae, aeo
-                state.as_params, state.as_opt, state.key = asr, aso, key2
-            state.params = self._agg_fn(state.params)
-            loss, acc, f1 = self._eval_fn(state.params, state.batch)
-            history["round"].append(t_g)
-            history["loss"].append(float(loss))
-            history["acc"].append(float(acc))
-            history["f1"].append(float(f1))
-            state.round = t_g + 1
+        metrics = []
+        for _ in range(rounds):
+            state, m = self.step(state)
+            metrics.append(m)
+        metrics = jax.device_get(metrics)    # ONE host sync for the whole run
+        history: Dict[str, list] = {
+            "round": [int(m["round"]) for m in metrics],
+            "loss": [float(m["loss"]) for m in metrics],
+            "acc": [float(m["acc"]) for m in metrics],
+            "f1": [float(m["f1"]) for m in metrics],
+        }
         return state, history

@@ -1,0 +1,55 @@
+"""Named FGL method registry.
+
+Every trainer the launchers, benchmarks, and examples expose is a *strategy
+composition* — a :class:`~repro.core.fedgl.FGLTrainer` assembled from a
+Topology, an Aggregator, and an ImputationStrategy (see
+:mod:`repro.core.strategies`) — registered here under the name the CLI uses:
+
+    from repro.core import registry
+    trainer = registry.build("SpreadFGL", cfg, batch, num_servers=3)
+
+Builders register themselves at import time via :func:`register`; resolving a
+name lazily imports the modules that define the stock methods
+(``repro.core.spreadfgl`` and ``repro.core.baselines``), so importing this
+module alone never pulls in the engine.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+Builder = Callable[..., Any]  # (cfg, batch, **kw) -> FGLTrainer
+
+_BUILDERS: Dict[str, Builder] = {}
+
+
+def register(name: str) -> Callable[[Builder], Builder]:
+    """Decorator: expose ``builder(cfg, batch, **kw)`` under ``name``."""
+    def deco(builder: Builder) -> Builder:
+        if name in _BUILDERS and _BUILDERS[name] is not builder:
+            raise ValueError(f"method {name!r} already registered")
+        _BUILDERS[name] = builder
+        return builder
+    return deco
+
+
+def _populate() -> None:
+    # Stock methods self-register on import.
+    import repro.core.baselines   # noqa: F401
+    import repro.core.spreadfgl   # noqa: F401
+
+
+def build(name: str, cfg, batch, **kw):
+    """Construct the registered method ``name`` for (cfg, batch)."""
+    _populate()
+    try:
+        builder = _BUILDERS[name]
+    except KeyError:
+        raise KeyError(f"unknown FGL method {name!r}; "
+                       f"available: {', '.join(names())}") from None
+    return builder(cfg, batch, **kw)
+
+
+def names() -> tuple:
+    """All registered method names (sorted)."""
+    _populate()
+    return tuple(sorted(_BUILDERS))

@@ -1,11 +1,14 @@
-"""SpreadFGL / FedGL facades (Sec. III-B and III-E).
+"""SpreadFGL / FedGL as strategy compositions (Sec. III-B and III-E).
 
-Thin constructors over the shared :class:`~repro.core.fedgl.FGLTrainer` engine,
-wired exactly as the paper's experiment section configures them:
+Thin builders over the shared :class:`~repro.core.fedgl.FGLTrainer` engine,
+wired exactly as the paper's experiment section configures them and
+registered in :mod:`repro.core.registry`:
 
-- ``make_fedgl``: one edge server covering all clients, FedAvg aggregation.
-- ``make_spreadfgl``: N edge servers (3 in the paper's testbed) on a ring
-  topology, Eq. 15 trace regularizer, Eq. 16 neighbor aggregation.
+- ``make_fedgl`` (``"FedGL"``): star topology (one edge server covering all
+  clients), FedAvg aggregation, SpreadFGL generator round.
+- ``make_spreadfgl`` (``"SpreadFGL"``): N edge servers (3 in the paper's
+  testbed) on a ring — or any custom adjacency — Eq. 16 neighbor
+  aggregation, Eq. 15 trace regularizer, SpreadFGL generator round.
 """
 from __future__ import annotations
 
@@ -13,30 +16,29 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core import strategies as S
 from repro.core.fedgl import FGLTrainer
-from repro.core.partition import group_clients_by_server, ring_adjacency
+from repro.core.registry import register
 from repro.core.types import ClientBatch, FGLConfig
 
 
+@register("FedGL")
 def make_fedgl(cfg: FGLConfig, batch: ClientBatch, **kw) -> FGLTrainer:
-    m = batch.num_clients
-    adj = np.ones((1, 1), dtype=np.float32)
-    server_of_client = np.zeros(m, dtype=np.int32)
-    cfg = _with_servers(cfg, 1, m)
-    return FGLTrainer(cfg, batch, adj, server_of_client, **kw)
+    return FGLTrainer(cfg, batch, topology=S.StarTopology(),
+                      aggregator=S.FedAvgAggregator(),
+                      imputation=S.SpreadImputation(), **kw)
 
 
+@register("SpreadFGL")
 def make_spreadfgl(cfg: FGLConfig, batch: ClientBatch, *, num_servers: int = 3,
                    adjacency: Optional[np.ndarray] = None, **kw) -> FGLTrainer:
-    m = batch.num_clients
-    if m % num_servers:
-        raise ValueError(f"M={m} must divide across N={num_servers} servers")
-    adj = adjacency if adjacency is not None else ring_adjacency(num_servers)
-    server_of_client = group_clients_by_server(m, num_servers)
-    cfg = _with_servers(cfg, num_servers, m // num_servers)
-    return FGLTrainer(cfg, batch, adj, server_of_client, **kw)
-
-
-def _with_servers(cfg: FGLConfig, n: int, m_per: int) -> FGLConfig:
-    import dataclasses
-    return dataclasses.replace(cfg, num_edge_servers=n, clients_per_server=m_per)
+    if adjacency is not None:
+        if adjacency.shape[0] != num_servers:
+            raise ValueError(f"adjacency is {adjacency.shape[0]}x"
+                             f"{adjacency.shape[1]} but num_servers={num_servers}")
+        topology = S.CustomTopology(adjacency)
+    else:
+        topology = S.RingTopology(num_servers)
+    return FGLTrainer(cfg, batch, topology=topology,
+                      aggregator=S.NeighborAggregator(),
+                      imputation=S.SpreadImputation(), **kw)

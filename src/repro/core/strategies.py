@@ -1,0 +1,304 @@
+"""Pluggable strategy components of the FGL engine.
+
+Algorithm 1 of SpreadFGL is one outer loop; everything the related work
+varies lives on three axes, each a small protocol with concrete
+implementations here:
+
+- :class:`Topology` — how clients map onto edge servers and how servers are
+  wired to each other (star = FedGL's single aggregation point, ring =
+  SpreadFGL's testbed, custom adjacency = anything else). AdaFGL-style
+  variants swap this axis.
+- :class:`Aggregator` — how client classifiers are combined each round
+  (FedAvg, Eq. 16 neighbor aggregation, identity for purely local training).
+  FedGTA-style variants swap this axis.
+- :class:`ImputationStrategy` — what happens on the every-K graph-fixing
+  round (the SpreadFGL generator round, FedSage+'s local neighbor
+  generation, or nothing).
+
+:class:`~repro.core.fedgl.FGLTrainer` is composed from one of each; the
+named compositions live in :mod:`repro.core.registry`. Strategies are
+frozen dataclasses (hashable, usable as jit-static closures) and hold no
+jax state — per-round state threads through ``FGLState``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import imputation, patcher
+from repro.core.partition import group_clients_by_server, ring_adjacency
+from repro.core.types import ClientBatch
+from repro.optim.adam import Adam
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Topology: client -> edge-server grouping + server-server adjacency.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TopologyLayout:
+    """Resolved edge layout for a concrete client count."""
+
+    adjacency: np.ndarray        # [N, N] server-server weights (a_rj of Eq. 16)
+    server_of_client: np.ndarray  # [M] owning server of each client
+    num_servers: int
+    clients_per_server: int
+
+
+@runtime_checkable
+class Topology(Protocol):
+    def build(self, num_clients: int) -> TopologyLayout: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class StarTopology:
+    """One edge server covering every client (FedGL, Sec. III-B)."""
+
+    def build(self, num_clients: int) -> TopologyLayout:
+        return TopologyLayout(np.ones((1, 1), dtype=np.float32),
+                              np.zeros(num_clients, dtype=np.int32),
+                              1, num_clients)
+
+
+@dataclasses.dataclass(frozen=True)
+class RingTopology:
+    """N edge servers on a ring (SpreadFGL's testbed, Sec. III-E)."""
+
+    num_servers: int = 3
+
+    def build(self, num_clients: int) -> TopologyLayout:
+        n = self.num_servers
+        if num_clients % n:
+            raise ValueError(f"M={num_clients} must divide across N={n} servers")
+        return TopologyLayout(ring_adjacency(n),
+                              group_clients_by_server(num_clients, n),
+                              n, num_clients // n)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class CustomTopology:
+    """Arbitrary server-server adjacency; clients grouped contiguously."""
+
+    adjacency: np.ndarray
+
+    def build(self, num_clients: int) -> TopologyLayout:
+        adj = np.asarray(self.adjacency, dtype=np.float32)
+        if adj.ndim != 2 or adj.shape[0] != adj.shape[1]:
+            raise ValueError(f"adjacency must be square, got {adj.shape}")
+        n = adj.shape[0]
+        if num_clients % n:
+            raise ValueError(f"M={num_clients} must divide across N={n} servers")
+        return TopologyLayout(adj, group_clients_by_server(num_clients, n),
+                              n, num_clients // n)
+
+
+# ---------------------------------------------------------------------------
+# Aggregator: combine client classifiers once per global round.
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class Aggregator(Protocol):
+    def aggregate(self, params: PyTree, *, adj: jnp.ndarray,
+                  num_servers: int, m_per: int) -> PyTree: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class IdentityAggregator:
+    """No aggregation: clients keep their own weights (LocalFGL)."""
+
+    def aggregate(self, params, *, adj, num_servers, m_per):
+        return params
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvgAggregator:
+    """Per-server FedAvg: mean over covered clients, broadcast back."""
+
+    def aggregate(self, params, *, adj, num_servers, m_per):
+        def agg(leaf):
+            grouped = leaf.reshape((num_servers, m_per) + leaf.shape[1:])
+            w = jnp.sum(grouped, axis=1) / m_per
+            return jnp.repeat(w, m_per, axis=0)
+        return jax.tree.map(agg, params)
+
+
+@dataclasses.dataclass(frozen=True)
+class NeighborAggregator:
+    """Eq. 16: each server averages over itself and its topology neighbors,
+
+    W_j = sum_r a_rj * sum_i W_(r,i) / sum_r a_rj M_r — the SpreadFGL rule
+    that removes the single aggregation point.
+    """
+
+    def aggregate(self, params, *, adj, num_servers, m_per):
+        def agg(leaf):
+            grouped = leaf.reshape((num_servers, m_per) + leaf.shape[1:])
+            client_sum = jnp.sum(grouped, axis=1)              # [N, ...]
+            num = jnp.einsum("rj,r...->j...", adj, client_sum)
+            den = jnp.sum(adj, axis=0) * m_per                 # [N]
+            w = num / den.reshape((num_servers,) + (1,) * (leaf.ndim - 1))
+            return jnp.repeat(w, m_per, axis=0)
+        return jax.tree.map(agg, params)
+
+
+# ---------------------------------------------------------------------------
+# ImputationStrategy: the every-K graph-fixing round.
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class ImputationStrategy(Protocol):
+    active: bool
+
+    def impute(self, engine, state): ...
+
+
+@dataclasses.dataclass(frozen=True)
+class NoImputation:
+    """Skip graph fixing entirely (LocalFGL / FedAvg-fusion baselines)."""
+
+    active = False
+
+    def impute(self, engine, state):
+        return state
+
+
+@dataclasses.dataclass(frozen=True)
+class SpreadImputation:
+    """SpreadFGL's generator round (Algorithm 1 lines 11-24).
+
+    Fuse client embeddings per server, train the AE/assessor pair
+    adversarially, take cross-subgraph top-k similarity links, and fix every
+    client graph through the graphic patcher. The [N] server axis is a single
+    vmap (shardable across an edge mesh); per-server results are stitched
+    back to the global flat index space by
+    :func:`patcher.stitch_server_links`.
+    """
+
+    active = True
+
+    def impute(self, engine, state):
+        batch = state.batch
+        emb = engine._embeddings(state.params, batch)       # [M, n_pad, c]
+        n_pad = batch.x.shape[1]
+        n, mp = engine.n_servers, engine.m_per
+        emb_g = emb.reshape((n, mp) + emb.shape[1:])        # [N, M_per, n_pad, c]
+        mask_g = batch.node_mask.reshape(n, mp, n_pad)
+        keys = jax.random.split(state.key, n + 1)
+        key, server_keys = keys[0], keys[1:]
+        client_ids = imputation.client_of_flat(mp, n_pad)
+        (ae_params, ae_opt, as_params, as_opt, scores, idx, x_bar) = jax.vmap(
+            engine._server_round, in_axes=(0, 0, 0, 0, 0, 0, 0, None)
+        )(server_keys, state.ae_params, state.ae_opt, state.as_params,
+          state.as_opt, emb_g, mask_g, client_ids)
+        scores, idx, x_bar = patcher.stitch_server_links(scores, idx, x_bar)
+        batch = patcher.fix_graphs(batch, scores, idx, x_bar)
+        return dataclasses.replace(state, batch=batch, ae_params=ae_params,
+                                   ae_opt=ae_opt, as_params=as_params,
+                                   as_opt=as_opt, key=key)
+
+    def impute_reference(self, engine, state):
+        """Sequential per-server loop (tests/benchmarks only).
+
+        Preserves the pre-refactor structure — a Python loop running one
+        server at a time — but uses the same per-server key derivation as
+        :meth:`impute` (one ``split(key, N+1)`` up front), so the two are
+        numerically equivalent and the equivalence test isolates exactly the
+        loop→vmap change. Also the baseline the load-balance benchmark times
+        against.
+        """
+        batch = state.batch
+        emb = engine._embeddings(state.params, batch)       # [M, n_pad, c]
+        n_pad = batch.x.shape[1]
+        keys = jax.random.split(state.key, engine.n_servers + 1)
+        key, server_keys = keys[0], keys[1:]
+        client_ids = imputation.client_of_flat(engine.m_per, n_pad)
+        outs = []
+        for j in range(engine.n_servers):
+            sl = slice(j * engine.m_per, (j + 1) * engine.m_per)
+            take_j = lambda t: jax.tree.map(lambda x: x[j], t)
+            outs.append(engine._server_round(
+                server_keys[j], take_j(state.ae_params), take_j(state.ae_opt),
+                take_j(state.as_params), take_j(state.as_opt), emb[sl],
+                batch.node_mask[sl], client_ids))
+        stack = lambda i: jax.tree.map(lambda *x: jnp.stack(x), *[o[i] for o in outs])
+        ae_params, ae_opt, as_params, as_opt = (stack(i) for i in range(4))
+        scores, idx, x_bar = patcher.stitch_server_links(
+            stack(4), stack(5), stack(6))
+        batch = patcher.fix_graphs(batch, scores, idx, x_bar)
+        return dataclasses.replace(state, batch=batch, ae_params=ae_params,
+                                   ae_opt=ae_opt, as_params=as_params,
+                                   as_opt=as_opt, key=key)
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalGenImputation:
+    """FedSage+-style purely local neighbor generation (Zhang et al. '21).
+
+    Per client: train a linear x -> mean(neighbor x) predictor on the
+    client's own neighborhoods, then append one synthetic neighbor for each
+    of the ``aug_max`` highest-degree nodes. No cross-client information
+    flows — exactly the limitation FedGL/SpreadFGL address (Fig. 1).
+    """
+
+    gen_steps: int = 20
+
+    active = True
+
+    def impute(self, engine, state):
+        key, kg = jax.random.split(state.key)
+        batch = _local_generation(kg, state.batch, self.gen_steps)
+        return dataclasses.replace(state, batch=batch, key=key)
+
+
+def _local_generation(key, batch: ClientBatch, gen_steps: int) -> ClientBatch:
+    d = batch.x.shape[-1]
+    n_local = batch.n_local_max
+    aug = batch.aug_max
+    opt = Adam(lr=1e-2)
+
+    def per_client(k, x, adjm, node_mask):
+        a = adjm[:n_local, :n_local] * (node_mask[:n_local, None] *
+                                        node_mask[None, :n_local])
+        deg = jnp.sum(a, axis=-1)
+        target = (a @ x[:n_local]) / jnp.maximum(deg[:, None], 1.0)
+
+        def loss_fn(p):
+            pred = x[:n_local] @ p["w"] + p["b"]
+            mask = (deg > 0).astype(x.dtype)
+            return jnp.sum(jnp.square(pred - target) * mask[:, None]) / jnp.maximum(
+                jnp.sum(mask), 1.0)
+
+        p = {"w": jnp.zeros((d, d), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+        st = opt.init(p)
+
+        def step(carry, _):
+            p, st = carry
+            g = jax.grad(loss_fn)(p)
+            p, st = opt.update(g, st, p)
+            return (p, st), ()
+        (p, _), _ = jax.lax.scan(step, (p, st), None, length=gen_steps)
+
+        # Highest-degree real nodes get one synthetic neighbor each.
+        score = jnp.where(node_mask[:n_local] > 0, deg, -jnp.inf)
+        _, src = jax.lax.top_k(score, aug)
+        feats = x[src] @ p["w"] + p["b"]
+        ok = jnp.isfinite(score[src]).astype(x.dtype)
+        aug_rows = n_local + jnp.arange(aug)
+        x = x.at[aug_rows].set(feats * ok[:, None])
+        adjm = adjm.at[n_local:, :].set(0.0)
+        adjm = adjm.at[:, n_local:].set(0.0)
+        adjm = adjm.at[src, aug_rows].set(ok)
+        adjm = adjm.at[aug_rows, src].set(ok)
+        node_mask = node_mask.at[aug_rows].set(ok)
+        return x, adjm, node_mask
+
+    keys = jax.random.split(key, batch.num_clients)
+    x, adjm, node_mask = jax.vmap(per_client)(keys, batch.x, batch.adj,
+                                              batch.node_mask)
+    return batch.replace(x=x, adj=adjm, node_mask=node_mask)

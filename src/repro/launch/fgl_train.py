@@ -2,6 +2,11 @@
 
   PYTHONPATH=src python -m repro.launch.fgl_train --dataset cora --method \
       SpreadFGL --clients 6 --rounds 12
+
+Every method resolves through ``repro.core.registry`` — the same strategy
+compositions the benchmarks and examples use. ``--save-state`` checkpoints
+the final ``FGLState``; ``--resume`` restores one and continues Algorithm 1
+at the checkpointed round (true resume, imputation schedule intact).
 """
 from __future__ import annotations
 
@@ -10,9 +15,9 @@ import json
 
 import jax
 
-from repro.core.baselines import REGISTRY as BASELINES
+from repro.checkpoint import io as ckpt_io
+from repro.core import registry
 from repro.core.partition import count_missing_links, partition_graph
-from repro.core.spreadfgl import make_fedgl, make_spreadfgl
 from repro.core.types import FGLConfig
 from repro.data.synthetic_graphs import DATASETS, make_sbm_graph
 
@@ -20,9 +25,7 @@ from repro.data.synthetic_graphs import DATASETS, make_sbm_graph
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", choices=tuple(DATASETS), default="cora")
-    ap.add_argument("--method", default="SpreadFGL",
-                    choices=("FedGL", "SpreadFGL", "local", "fedavg_fusion",
-                             "fedsage_plus"))
+    ap.add_argument("--method", default="SpreadFGL", choices=registry.names())
     ap.add_argument("--clients", type=int, default=6)
     ap.add_argument("--servers", type=int, default=3)
     ap.add_argument("--rounds", type=int, default=12)
@@ -35,6 +38,10 @@ def main() -> None:
     ap.add_argument("--signal-ratio", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default="")
+    ap.add_argument("--save-state", default="",
+                    help="write the final FGLState to this .npz")
+    ap.add_argument("--resume", default="",
+                    help="restore an FGLState .npz and continue at its round")
     ap.add_argument("--edge-mesh", action="store_true",
                     help="shard the [N] edge-server axis across devices "
                          "(SpreadFGL only)")
@@ -52,23 +59,31 @@ def main() -> None:
                     imputation_interval=args.imputation_interval,
                     top_k_links=args.top_k, aug_max=12,
                     label_ratio=args.label_ratio)
-    if args.method == "FedGL":
-        tr = make_fedgl(cfg, batch)
-    elif args.method == "SpreadFGL":
-        mesh = None
+    kw = {}
+    if args.method == "SpreadFGL":
+        kw["num_servers"] = args.servers
         if args.edge_mesh:
             from repro.launch.mesh import make_edge_mesh
-            mesh = make_edge_mesh(args.servers)
-            print(f"[fgl] edge mesh: {mesh.size} device(s) for N={args.servers}")
-        tr = make_spreadfgl(cfg, batch, num_servers=args.servers, edge_mesh=mesh)
-    else:
-        tr = BASELINES[args.method](cfg, batch)
+            kw["edge_mesh"] = make_edge_mesh(args.servers)
+            print(f"[fgl] edge mesh: {kw['edge_mesh'].size} device(s) for "
+                  f"N={args.servers}")
+    tr = registry.build(args.method, cfg, batch, **kw)
 
-    _, hist = tr.fit(jax.random.key(args.seed), batch, rounds=args.rounds)
-    for r in range(len(hist["round"])):
-        print(f"[fgl] round {r:3d} loss={hist['loss'][r]:8.4f} "
-              f"acc={hist['acc'][r]:.3f} f1={hist['f1'][r]:.3f}")
+    if args.resume:
+        state = ckpt_io.restore(args.resume,
+                                tr.init(jax.random.key(args.seed), batch))
+        print(f"[fgl] resumed {args.resume} at round {state.round}")
+        state, hist = tr.fit(state=state, rounds=args.rounds)
+    else:
+        state, hist = tr.fit(jax.random.key(args.seed), batch,
+                             rounds=args.rounds)
+    for i, r in enumerate(hist["round"]):
+        print(f"[fgl] round {r:3d} loss={hist['loss'][i]:8.4f} "
+              f"acc={hist['acc'][i]:.3f} f1={hist['f1'][i]:.3f}")
     print(f"[fgl] best acc={max(hist['acc']):.3f} f1={max(hist['f1']):.3f}")
+    if args.save_state:
+        ckpt_io.save(args.save_state, state)
+        print(f"[fgl] saved FGLState (round {state.round}) to {args.save_state}")
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(hist, f)

@@ -64,6 +64,10 @@ class TestLogicalToSpec:
 
 
 @pytest.mark.slow
+@pytest.mark.skipif(
+    not hasattr(jax.sharding, "set_mesh"),
+    reason="jax.sharding.set_mesh landed after this jax version "
+           f"({jax.__version__}); the subprocess inherits the same jax")
 def test_multi_device_lowering_subprocess():
     """End-to-end spec plumbing on 8 forced host devices (subprocess so the
     main test process keeps its single-device jax)."""

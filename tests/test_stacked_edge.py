@@ -6,7 +6,6 @@ stacked state must contain no Python lists, checkpoints must round-trip, and
 the Pallas kernel wrappers must survive non-block-multiple shapes via the
 ``ops.py`` padding path (the shapes the vmapped round actually feeds them).
 """
-import dataclasses
 import os
 import tempfile
 
@@ -19,7 +18,7 @@ from repro.checkpoint import io
 from repro.core import assessor as assessor_lib
 from repro.core import imputation, patcher
 from repro.core.partition import partition_graph
-from repro.core.spreadfgl import make_fedgl, make_spreadfgl
+from repro.core.spreadfgl import make_spreadfgl
 from repro.core.types import FGLConfig
 from repro.data.synthetic_graphs import DATASETS, make_sbm_graph
 from repro.kernels import ops, ref
@@ -38,20 +37,16 @@ def setup2():
     return tr, state
 
 
-def _impute_args(state):
-    return (state.params, state.batch, state.ae_params, state.ae_opt,
-            state.as_params, state.as_opt, state.key)
-
-
 class TestStackedEquivalence:
     def test_vmapped_matches_sequential_loop(self, setup2):
         """vmap over the [N] axis == the seed's per-server Python loop."""
         tr, state = setup2
-        out_v = tr._impute_fn(_impute_args(state))
-        out_s = jax.jit(tr._imputation_round_reference)(_impute_args(state))
+        out_v = tr._impute_fn(state)
+        out_s = jax.jit(tr._imputation_round_reference)(state)
         # batch (graph fixing), generator params + opt states all agree.
-        for i in range(5):
-            for a, b in zip(jax.tree.leaves(out_v[i]), jax.tree.leaves(out_s[i])):
+        for field in ("batch", "ae_params", "ae_opt", "as_params", "as_opt"):
+            for a, b in zip(jax.tree.leaves(getattr(out_v, field)),
+                            jax.tree.leaves(getattr(out_s, field))):
                 np.testing.assert_allclose(np.asarray(a, np.float32),
                                            np.asarray(b, np.float32), atol=1e-5)
 
@@ -125,8 +120,8 @@ class TestCheckpointStackedState:
         path = os.path.join(tempfile.mkdtemp(), "fgl_state.npz")
         io.save(path, state)
         restored = io.restore(path, state)
-        out = tr._impute_fn(_impute_args(restored))
-        for leaf in jax.tree.leaves(out[0]):
+        out = tr._impute_fn(restored)
+        for leaf in jax.tree.leaves(out.batch):
             assert np.isfinite(np.asarray(leaf, np.float32)).all()
 
 

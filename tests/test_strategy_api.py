@@ -1,0 +1,219 @@
+"""The strategy-based engine API: init/step/fit(state=) lifecycle, true
+resume through checkpoint round-trips, the method registry, and fixed-seed
+history regressions pinning the redesign to the pre-refactor engine."""
+import dataclasses
+import os
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import io
+from repro.core import registry
+from repro.core import strategies as S
+from repro.core.baselines import REGISTRY as BASELINES
+from repro.core.fedgl import FGLTrainer
+from repro.core.partition import partition_graph
+from repro.core.spreadfgl import make_spreadfgl
+from repro.core.types import FGLConfig
+from repro.data.synthetic_graphs import DATASETS, make_sbm_graph
+
+
+@pytest.fixture(scope="module")
+def small():
+    """Fixed-seed 2-server / 4-client batch (fast enough for many fits)."""
+    g = make_sbm_graph(DATASETS["cora"], scale=0.10, seed=1,
+                       feature_noise=3.0, signal_ratio=0.5)
+    batch, _ = partition_graph(g, 4, aug_max=8, seed=0, label_ratio=0.3)
+    cfg = FGLConfig(hidden_dim=16, local_rounds=2, imputation_interval=1,
+                    top_k_links=3, aug_max=8)
+    return batch, cfg
+
+
+# Histories of the pre-refactor monolithic FGLTrainer.fit() on the `small`
+# fixture, fit(jax.random.key(0), batch, rounds=4), captured at the commit
+# before the strategy redesign. The redesigned engine must reproduce them.
+GOLDEN_SPREADFGL = {
+    "loss": [1.4747446775436401, 0.2508442997932434,
+             0.06906763464212418, 0.03646638244390488],
+    "acc": [0.16363635659217834, 0.23636363446712494,
+            0.30909091234207153, 0.3636363744735718],
+    "f1": [0.09297052770853043, 0.17866826057434082,
+           0.25934067368507385, 0.33452627062797546],
+}
+GOLDEN_FEDGL = {
+    "loss": [1.5929425954818726, 0.25791120529174805,
+             0.07516966760158539, 0.03908001631498337],
+    "acc": [0.16363635659217834, 0.23636363446712494,
+            0.34545454382896423, 0.34545454382896423],
+    "f1": [0.09297052770853043, 0.18033909797668457,
+           0.2997002899646759, 0.3178369402885437],
+}
+
+
+class TestHistoryRegression:
+    """Fixed-seed histories are unchanged across the strategy redesign."""
+
+    @pytest.mark.parametrize("name,kw,golden", [
+        ("SpreadFGL", {"num_servers": 2}, GOLDEN_SPREADFGL),
+        ("FedGL", {}, GOLDEN_FEDGL),
+    ])
+    def test_fit_matches_pre_refactor_golden(self, small, name, kw, golden):
+        batch, cfg = small
+        tr = registry.build(name, cfg, batch, **kw)
+        _, hist = tr.fit(jax.random.key(0), batch, rounds=4)
+        for k, want in golden.items():
+            np.testing.assert_allclose(hist[k], want, atol=1e-4,
+                                       err_msg=f"{name} history[{k!r}] drifted")
+
+    def test_step_matches_fit(self, small):
+        """Driving step() by hand reproduces fit() exactly."""
+        batch, cfg = small
+        tr = make_spreadfgl(cfg, batch, num_servers=2)
+        _, hist = tr.fit(jax.random.key(0), batch, rounds=3)
+        state = tr.init(jax.random.key(0), batch)
+        for i in range(3):
+            state, m = tr.step(state)
+            assert m["round"] == i == hist["round"][i]
+            np.testing.assert_array_equal(float(m["loss"]), hist["loss"][i])
+            np.testing.assert_array_equal(float(m["acc"]), hist["acc"][i])
+        assert state.round == 3
+
+    def test_step_does_not_mutate_input_state(self, small):
+        batch, cfg = small
+        tr = make_spreadfgl(cfg, batch, num_servers=2)
+        state = tr.init(jax.random.key(0), batch)
+        before = jax.tree.map(np.asarray, state.params)
+        _, _ = tr.step(state)
+        assert state.round == 0
+        for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(state.params)):
+            np.testing.assert_array_equal(a, np.asarray(b))
+
+
+class TestResume:
+    def test_resume_roundtrip_matches_uninterrupted_fit(self, small):
+        """fit 6 == fit 3 + checkpoint save/load + fit(state=restored) 3.
+
+        K=2 here, so the schedule imputes at rounds 0, 2, 4: the resumed run
+        only matches if fit(state=...) keys imputation off the *absolute*
+        round index (round 4 falls in the second half).
+        """
+        batch, cfg = small
+        cfg = dataclasses.replace(cfg, imputation_interval=2)
+        tr = make_spreadfgl(cfg, batch, num_servers=2)
+        _, full = tr.fit(jax.random.key(0), batch, rounds=6)
+
+        state, first = tr.fit(jax.random.key(0), batch, rounds=3)
+        path = os.path.join(tempfile.mkdtemp(), "resume.npz")
+        io.save(path, state)
+        restored = io.restore(path, tr.init(jax.random.key(0), batch))
+        assert restored.round == 3
+        state2, second = tr.fit(state=restored, rounds=3)
+
+        assert first["round"] + second["round"] == full["round"] == list(range(6))
+        for k in ("loss", "acc", "f1"):
+            np.testing.assert_allclose(first[k] + second[k], full[k], atol=1e-6)
+        assert state2.round == 6
+
+    def test_fit_requires_state_or_key_and_batch(self, small):
+        batch, cfg = small
+        tr = make_spreadfgl(cfg, batch, num_servers=2)
+        with pytest.raises(ValueError, match="state="):
+            tr.fit(rounds=1)
+
+    def test_fit_rejects_state_plus_key_batch(self, small):
+        """Passing both is ambiguous: the state's own key/batch would win."""
+        batch, cfg = small
+        tr = make_spreadfgl(cfg, batch, num_servers=2)
+        state = tr.init(jax.random.key(0), batch)
+        with pytest.raises(ValueError, match="resumes"):
+            tr.fit(jax.random.key(1), batch, state=state, rounds=1)
+
+
+class TestRegistry:
+    def test_all_methods_registered(self):
+        assert set(registry.names()) >= {"FedGL", "SpreadFGL", "local",
+                                         "fedavg_fusion", "fedsage_plus"}
+
+    def test_unknown_method_lists_available(self, small):
+        batch, cfg = small
+        with pytest.raises(KeyError, match="SpreadFGL"):
+            registry.build("nope", cfg, batch)
+
+    def test_baselines_are_pure_compositions(self, small):
+        """Sec. IV-A baselines: plain FGLTrainer + strategies, no subclasses,
+        no overridden engine internals."""
+        batch, cfg = small
+        expected = {
+            "local": (S.IdentityAggregator, S.NoImputation),
+            "fedavg_fusion": (S.FedAvgAggregator, S.NoImputation),
+            "fedsage_plus": (S.FedAvgAggregator, S.LocalGenImputation),
+        }
+        for name, build in BASELINES.items():
+            tr = build(cfg, batch)
+            assert type(tr) is FGLTrainer, name
+            agg_t, imp_t = expected[name]
+            assert type(tr.aggregator) is agg_t
+            assert type(tr.imputation) is imp_t
+            assert isinstance(tr.topology, S.StarTopology)
+
+    def test_registry_and_baselines_agree(self, small):
+        batch, cfg = small
+        for name in ("local", "fedavg_fusion", "fedsage_plus"):
+            via_registry = registry.build(name, cfg, batch)
+            direct = BASELINES[name](cfg, batch)
+            assert type(via_registry.aggregator) is type(direct.aggregator)
+            assert type(via_registry.imputation) is type(direct.imputation)
+
+
+class TestStrategies:
+    def test_star_topology_layout(self):
+        lay = S.StarTopology().build(6)
+        assert lay.num_servers == 1 and lay.clients_per_server == 6
+        np.testing.assert_array_equal(lay.server_of_client, np.zeros(6))
+
+    def test_ring_topology_rejects_indivisible(self):
+        with pytest.raises(ValueError, match="divide"):
+            S.RingTopology(num_servers=4).build(6)
+
+    def test_custom_topology_via_make_spreadfgl(self, small):
+        batch, cfg = small
+        adj = np.ones((2, 2), dtype=np.float32)
+        tr = make_spreadfgl(cfg, batch, num_servers=2, adjacency=adj)
+        assert isinstance(tr.topology, S.CustomTopology)
+        assert tr.n_servers == 2
+
+    def test_custom_topology_shape_mismatch(self, small):
+        batch, cfg = small
+        with pytest.raises(ValueError, match="num_servers"):
+            make_spreadfgl(cfg, batch, num_servers=4,
+                           adjacency=np.ones((2, 2), np.float32))
+
+    def test_identity_aggregator_never_mixes(self, small):
+        batch, cfg = small
+        tr = registry.build("local", cfg, batch)
+        state = tr.init(jax.random.key(0), batch)
+        perturbed = jax.tree.map(
+            lambda p: p + np.arange(p.shape[0], dtype=np.float32).reshape(
+                (-1,) + (1,) * (p.ndim - 1)), state.params)
+        agg = tr.aggregate(perturbed)
+        for a, b in zip(jax.tree.leaves(agg), jax.tree.leaves(perturbed)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_no_imputation_is_inert(self, small):
+        batch, cfg = small
+        tr = registry.build("fedavg_fusion", cfg, batch)
+        assert not tr.imputation.active
+        state = tr.init(jax.random.key(0), batch)
+        assert tr.imputation.impute(tr, state) is state
+
+    def test_metrics_stay_on_device_until_fetched(self, small):
+        """step() metrics are jax arrays (no per-round host sync in fit)."""
+        batch, cfg = small
+        tr = registry.build("fedavg_fusion", cfg, batch)
+        state = tr.init(jax.random.key(0), batch)
+        _, m = tr.step(state)
+        for k in ("loss", "acc", "f1"):
+            assert isinstance(m[k], jax.Array), k
+        assert isinstance(m["round"], int)
