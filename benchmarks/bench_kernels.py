@@ -1,33 +1,53 @@
 """Kernel micro-benchmarks: µs/call of the jnp reference path on CPU plus the
 interpret-mode Pallas check (TPU wall-time is N/A in this container — the
-kernel's TPU performance claim lives in the roofline analysis instead)."""
+kernel's TPU performance claim lives in the roofline analysis instead).
+
+The sim-topology rows sweep ``kernel_impl``: the jnp reference
+``similarity_topk`` (per-block gram + ``jax.lax.top_k`` over all n columns)
+against the fused masked top-k kernel, at the shapes the imputation round
+actually feeds (c = num classes ≤ 15, n in the thousands).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import timeit, write_result
+from repro.core import imputation
 from repro.kernels import ops, ref
 
 
 def main(fast: bool = False):
     print("[bench] kernels — µs/call (CPU reference path)")
-    key = jax.random.key(0)
+    # Distinct keys per tensor: timing attention on q == k == v would measure
+    # a degenerate (identical-operand) problem.
+    kq, kk, kv, ka, kh, kr, km, ks = jax.random.split(jax.random.key(0), 8)
     rows = {}
 
-    q = jax.random.normal(key, (1, 8, 512, 64), jnp.float32)
-    k = jax.random.normal(key, (1, 8, 512, 64), jnp.float32)
-    v = jax.random.normal(key, (1, 8, 512, 64), jnp.float32)
+    q = jax.random.normal(kq, (1, 8, 512, 64), jnp.float32)
+    k = jax.random.normal(kk, (1, 8, 512, 64), jnp.float32)
+    v = jax.random.normal(kv, (1, 8, 512, 64), jnp.float32)
     fn = jax.jit(lambda: ref.flash_attention(q, k, v, causal=True))
     rows["flash_attention_ref_512"] = timeit(fn)
 
-    a = (jax.random.uniform(key, (512, 512)) < 0.1).astype(jnp.float32)
-    h = jax.random.normal(key, (512, 256), jnp.float32)
+    a = (jax.random.uniform(ka, (512, 512)) < 0.1).astype(jnp.float32)
+    h = jax.random.normal(kh, (512, 256), jnp.float32)
     rows["sage_aggregate_ref_512"] = timeit(jax.jit(lambda: ref.sage_aggregate(a, h)))
 
-    rowsm = jax.random.normal(key, (256, 15), jnp.float32)
-    hm = jax.random.normal(key, (4096, 15), jnp.float32)
+    rowsm = jax.random.normal(kr, (256, 15), jnp.float32)
+    hm = jax.random.normal(km, (4096, 15), jnp.float32)
     rows["sim_block_ref_4k"] = timeit(jax.jit(lambda: ref.sim_block(rowsm, hm)))
+
+    # The imputation hot path end-to-end (gram + masks + top-k), both impls.
+    n, c, topk = (1024, 10, 5) if fast else (4096, 10, 5)
+    hs = jax.nn.softmax(jax.random.normal(ks, (n, c)), -1)
+    mask = jnp.ones((n,))
+    cid = imputation.client_of_flat(8, n // 8)
+    rows[f"similarity_topk_reference_{n}"] = timeit(jax.jit(
+        lambda: imputation.similarity_topk(hs, mask, cid, topk,
+                                           kernel_impl="reference")))
+    rows[f"sim_topk_fused_interpret_{n}"] = timeit(
+        lambda: ops.sim_topk(hs, cid, mask, topk, interpret=True), iters=2)
 
     if not fast:
         rows["flash_attention_pallas_interpret_256"] = timeit(

@@ -63,7 +63,38 @@ def main(fast: bool = False):
     out["peak_load_reduction"] = ratio
     print(f"  peak-load reduction: {ratio:.2f}x")
     out["imputation_walltime"] = bench_imputation_walltime(fast=fast)
+    out["impl_sweep"] = bench_impl_sweep(fast=fast)
     write_result("load_balance", out)
+    return out
+
+
+def bench_impl_sweep(fast: bool = False):
+    """kernel_impl sweep over the full imputation round (own results file).
+
+    Times one vmapped SpreadFGL imputation round per impl. On CPU the Pallas
+    path runs in interpret mode (``pallas_interpret``), so its wall time is a
+    correctness checkpoint, not a speed claim — the compiled ``pallas`` row
+    only appears when a TPU is attached.
+    """
+    print("[bench] kernel_impl sweep over the imputation round")
+    _, batch, cfg = fgl_setup("cora", 6)
+    on_tpu = jax.default_backend() == "tpu"
+    impls = ("reference", "pallas") if on_tpu else ("reference",
+                                                    "pallas_interpret")
+    iters = 2 if fast else 5
+    out = {"backend": jax.default_backend()}
+    for impl in impls:
+        tr = make_spreadfgl(cfg, batch, num_servers=3, kernel_impl=impl)
+        state = tr.init(jax.random.key(0), batch)
+        t = timeit(lambda: tr._impute_fn(state), iters=iters)
+        out[impl] = {"imputation_round_us": t}
+        print(f"  {impl:18s} imputation round {t/1e3:8.1f} ms")
+    if "reference" in out and len(out) > 2:
+        other = [i for i in impls if i != "reference"][0]
+        out["speedup_vs_reference"] = (
+            out["reference"]["imputation_round_us"]
+            / out[other]["imputation_round_us"])
+    write_result("impl_sweep", out)
     return out
 
 

@@ -59,12 +59,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="reduced rounds/datasets (CI-sized)")
-    ap.add_argument("--only", choices=tuple(BENCHES))
+    ap.add_argument("--only", choices=tuple(BENCHES), action="append",
+                    help="run only these benchmarks (repeatable)")
     args = ap.parse_args()
 
     rows = []
     for name, fn in BENCHES.items():
-        if args.only and name != args.only:
+        if args.only and name not in args.only:
             continue
         t0 = time.time()
         result = fn(fast=args.fast)

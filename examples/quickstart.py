@@ -28,8 +28,12 @@ def main():
 
     # 2. FedGL (Sec. III-B): one edge server, imputation every K=2 rounds.
     #    Every named method is a strategy composition in the registry.
+    #    kernel_impl picks the hot-path kernels: "reference" (jnp) here;
+    #    "pallas" routes classifier aggregation AND the imputation round's
+    #    similarity top-k through the fused Pallas kernels on TPU
+    #    ("pallas_interpret" runs the same kernels on CPU).
     cfg = FGLConfig(hidden_dim=32, local_rounds=4, imputation_interval=2,
-                    top_k_links=4, aug_max=12)
+                    top_k_links=4, aug_max=12, kernel_impl="reference")
     trainer = registry.build("FedGL", cfg, batch)
 
     # 3. Drive Algorithm 1 round by round: init -> step -> step -> ...

@@ -1,11 +1,16 @@
 """SpreadFGL vs FedGL vs baselines: the paper's multi-edge scenario.
 
-  PYTHONPATH=src python examples/spreadfgl_multiserver.py
+  PYTHONPATH=src python examples/spreadfgl_multiserver.py [--impl pallas]
 
 Three edge servers on a ring (the paper's testbed topology), Eq. 16 neighbor
 aggregation + Eq. 15 trace regularizer, compared against the centralized FedGL
-and the three baselines of Sec. IV-A on the same partition.
+and the three baselines of Sec. IV-A on the same partition. ``--impl``
+selects the hot-path kernels (reference | pallas | pallas_interpret) for
+every method — the single ``FGLConfig.kernel_impl`` knob covers both
+classifier aggregation and the imputation round's fused similarity top-k.
 """
+import argparse
+
 import jax
 
 from repro.core import registry
@@ -16,11 +21,16 @@ from repro.launch.mesh import make_edge_mesh
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--impl", default="reference",
+                    choices=("reference", "pallas", "pallas_interpret"))
+    args = ap.parse_args()
+
     graph = make_sbm_graph(DATASETS["citeseer"], scale=0.15, seed=1,
                            feature_noise=3.0, signal_ratio=0.5)
     batch, _ = partition_graph(graph, num_clients=6, aug_max=12, seed=0)
     cfg = FGLConfig(hidden_dim=32, local_rounds=4, imputation_interval=2,
-                    top_k_links=4, aug_max=12)
+                    top_k_links=4, aug_max=12, kernel_impl=args.impl)
 
     # The [N] server axis shards across whatever devices exist (size-1 mesh on
     # a single-device host — identical numbers, no sharding). Every method is

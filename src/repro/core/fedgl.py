@@ -27,10 +27,10 @@ topology. All per-edge-server state (autoencoder, assessor, and their
 optimizer states) is likewise stacked on a leading ``[N]`` axis — there are no
 Python lists of per-server pytrees — and the whole imputation round is a
 single ``jax.vmap`` over that axis. When an edge mesh is supplied
-(``launch/edge_mesh.py``) the ``[N]`` axis is placed on a JAX device mesh and
-the vmapped round shards across devices. Everything jits; the outer
-edge-client communication loop is a Python loop (it mutates graph structure
-on imputation rounds).
+(``make_edge_mesh`` in ``launch/mesh.py``) the ``[N]`` axis is placed on a
+JAX device mesh and the vmapped round shards across devices. Everything jits;
+the outer edge-client communication loop is a Python loop (it mutates graph
+structure on imputation rounds).
 """
 from __future__ import annotations
 
@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core import assessor as assessor_lib
 from repro.core import gnn, imputation, strategies
+from repro.core import imputation as imputation_lib  # the ctor arg shadows it
 from repro.core.types import ClientBatch, FGLConfig
 from repro.optim.adam import Adam
 
@@ -93,9 +94,14 @@ class FGLTrainer:
                  *, topology: Optional[strategies.Topology] = None,
                  aggregator: Optional[strategies.Aggregator] = None,
                  imputation: Optional[strategies.ImputationStrategy] = None,
-                 aggregate_impl: str = "reference",
+                 kernel_impl: Optional[str] = None,
                  use_negative_sampling: bool = True, use_assessor: bool = True,
                  edge_mesh=None):
+        if kernel_impl is not None:       # constructor override wins over cfg
+            cfg = dataclasses.replace(cfg, kernel_impl=kernel_impl)
+        if cfg.kernel_impl not in imputation_lib.KERNEL_IMPLS:
+            raise ValueError(f"unknown kernel_impl {cfg.kernel_impl!r}; "
+                             f"expected one of {imputation_lib.KERNEL_IMPLS}")
         self.m = batch.num_clients
         self.topology = topology if topology is not None else strategies.StarTopology()
         layout = self.topology.build(self.m)
@@ -116,7 +122,8 @@ class FGLTrainer:
         self.num_classes = batch.num_classes
         self.adj_servers = jnp.asarray(layout.adjacency, jnp.float32)
         self.feature_dim = batch.x.shape[-1]
-        self.aggregate_impl = aggregate_impl
+        self.kernel_impl = self.cfg.kernel_impl
+        self.n_local = batch.n_local_max
         self.use_ns = use_negative_sampling
         self.use_assessor = use_assessor
         self.opt = Adam(lr=cfg.lr_classifier)
@@ -170,7 +177,7 @@ class FGLTrainer:
     def _client_loss(self, params_m: PyTree, batch: ClientBatch) -> jnp.ndarray:
         def one(params, x, adj, y, node_mask, train_mask):
             logits = gnn.apply_classifier(params, self.cfg.gnn_kind, x, adj, node_mask,
-                                          impl=self.aggregate_impl)
+                                          impl=self.kernel_impl)
             loss = _cross_entropy(logits, y, train_mask)
             if self.is_spread and self.cfg.trace_reg > 0:
                 loss = loss + self.cfg.trace_reg * _trace_reg(params)
@@ -200,18 +207,20 @@ class FGLTrainer:
     def _embeddings(self, params, batch: ClientBatch) -> jnp.ndarray:
         def one(p, x, adj, mask):
             logits = gnn.apply_classifier(p, self.cfg.gnn_kind, x, adj, mask,
-                                          impl=self.aggregate_impl)
+                                          impl=self.kernel_impl)
             return jax.nn.softmax(logits, axis=-1)
         return jax.vmap(one)(params, batch.x, batch.adj, batch.node_mask)
 
     def _train_generator(self, key, ae, ae_opt, asr, as_opt, h_real, flat_mask):
         """Alternating AE / assessor training (Algorithm 1 lines 16-23).
 
-        The noise matrix S is sampled ONCE per imputation round and held fixed
-        across AE/assessor iterations, so that row v of S is bound to node v:
-        the masked reconstruction term of Eq. (14) then makes h(f(S))_v track
-        h_v and the encoder output X̅_v = f(S)_v is a node-specific imputed
-        feature (Sec. III-C: "X̅ = f(S) indicates the potential features").
+        The noise matrix S is sampled ONCE per imputation round (the only
+        randomness here) and held fixed across AE/assessor iterations, so
+        that row v of S is bound to node v: the masked reconstruction term of
+        Eq. (14) then makes h(f(S))_v track h_v and the encoder output
+        X̅_v = f(S)_v is a node-specific imputed feature (Sec. III-C: "X̅ =
+        f(S) indicates the potential features"). The per-iteration scans are
+        deliberately keyless — S is NOT resampled per iteration.
         Returns (ae, ae_opt, asr, as_opt, s_noise).
         """
         cfg = self.cfg
@@ -219,10 +228,10 @@ class FGLTrainer:
         n = h_real.shape[0]
         e = (assessor_lib.negative_mask(h_real, theta) if self.use_ns
              else jnp.ones_like(h_real))
-        key, ks = jax.random.split(key)
+        _, ks = jax.random.split(key)
         s_noise = imputation.sample_noise(ks, n, self.num_classes)
 
-        def ae_step(carry, k):
+        def ae_step(carry, _):
             ae, ae_opt = carry
             s = s_noise
             if self.use_assessor:
@@ -239,7 +248,7 @@ class FGLTrainer:
             ae, ae_opt = self.gen_opt.update(grads, ae_opt, ae)
             return (ae, ae_opt), ()
 
-        def as_step(carry, k):
+        def as_step(carry, _):
             asr, as_opt = carry
             _, h_fake = imputation.reconstruct(ae_current[0], s_noise)
             if self.use_ns:
@@ -251,14 +260,13 @@ class FGLTrainer:
             return (asr, as_opt), ()
 
         for _ in range(cfg.ae_outer_iters):
-            key, k1, k2 = jax.random.split(key, 3)
             asr_current = (asr, as_opt)
-            (ae, ae_opt), _ = jax.lax.scan(ae_step, (ae, ae_opt),
-                                           jax.random.split(k1, cfg.ae_iters))
+            (ae, ae_opt), _ = jax.lax.scan(ae_step, (ae, ae_opt), None,
+                                           length=cfg.ae_iters)
             ae_current = (ae, ae_opt)
             if self.use_assessor:
-                (asr, as_opt), _ = jax.lax.scan(as_step, (asr, as_opt),
-                                                jax.random.split(k2, cfg.assessor_iters))
+                (asr, as_opt), _ = jax.lax.scan(as_step, (asr, as_opt), None,
+                                                length=cfg.assessor_iters)
         return ae, ae_opt, asr, as_opt, s_noise
 
     def _server_round(self, key_j, ae, aeo, asr, aso, emb_j, mask_j, client_ids):
@@ -267,8 +275,14 @@ class FGLTrainer:
         h_flat, flat_mask = imputation.fuse_embeddings(emb_j, mask_j)
         ae, aeo, asr, aso, s_noise = self._train_generator(
             key_j, ae, aeo, asr, aso, h_flat, flat_mask)
+        # Link targets must be REAL local nodes: after the first fixing round
+        # the patcher sets node_mask=1 on aug slots, and without this
+        # restriction later rounds could link to synthetic nodes.
+        target_mask = flat_mask * imputation.local_slot_mask(
+            self.m_per, emb_j.shape[1], self.n_local)
         scores, idx = imputation.similarity_topk(
-            h_flat, flat_mask, client_ids, cfg.top_k_links)
+            h_flat, flat_mask, client_ids, cfg.top_k_links,
+            kernel_impl=self.kernel_impl, target_mask=target_mask)
         x_bar = imputation.encode(ae, s_noise)              # X̅ = f(S), same S
         return ae, aeo, asr, aso, scores, idx, x_bar
 
@@ -286,7 +300,7 @@ class FGLTrainer:
         """One compiled call per round: (mean client loss, accuracy, macro-F1)."""
         def one(p, x, adj, y, node_mask, test_mask):
             logits = gnn.apply_classifier(p, self.cfg.gnn_kind, x, adj, node_mask,
-                                          impl=self.aggregate_impl)
+                                          impl=self.kernel_impl)
             pred = jnp.argmax(logits, axis=-1)
             mask = test_mask * (y >= 0)
             correct = jnp.sum((pred == y) * mask)

@@ -6,7 +6,8 @@ the GCN (mean) aggregator is the paper's local node classifier F_i^j.
 
 The neighbor aggregation ``A_norm @ h`` is the per-client compute hot spot; on
 TPU it is served by the ``sage_aggregate`` Pallas kernel (kernels/), selected
-via ``aggregate_impl``.
+via the engine-wide ``kernel_impl`` knob (``FGLConfig.kernel_impl`` /
+``fgl_train --impl``), which reaches this module as the ``impl=`` argument.
 """
 from __future__ import annotations
 

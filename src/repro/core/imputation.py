@@ -12,8 +12,9 @@ Pipeline, run at the edge server every K edge-client communications:
    versatile assessor (assessor.py).
 
 The gram-matrix step is the FGL-side compute hot spot (n² in the number of
-nodes an edge server covers); ``sim_impl="pallas"`` routes it through the
-``sim_topk`` Pallas kernel.
+nodes an edge server covers); ``kernel_impl="pallas"`` routes it through the
+fused masked top-k ``sim_topk`` Pallas kernel (``kernel_impl="pallas_interpret"``
+runs the same kernel in interpret mode for CPU validation).
 """
 from __future__ import annotations
 
@@ -50,42 +51,77 @@ def client_of_flat(num_clients: int, n_pad: int) -> jnp.ndarray:
 # Similarity topology A̅ = H Hᵀ + cross-subgraph top-k links.
 # ---------------------------------------------------------------------------
 
+KERNEL_IMPLS = ("reference", "pallas", "pallas_interpret")
+
+
 def similarity_topk(h: jnp.ndarray, flat_mask: jnp.ndarray, client_ids: jnp.ndarray,
-                    k: int, *, sim_impl: str = "reference",
-                    block: int = 256) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                    k: int, *, kernel_impl: str = "reference", block: int = 256,
+                    target_mask: jnp.ndarray = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Top-k most-similar cross-subgraph nodes per node.
 
-    Never materializes the full n×n gram matrix: rows are processed in blocks
-    (the Pallas kernel tiles the same way on TPU VMEM).
+    Thin dispatcher over two paths that never materialize the full n×n gram
+    matrix:
 
-    Returns (scores [n, k], idx [n, k]); invalid rows (mask 0) get idx -1.
+    - ``"reference"``: jnp row blocks — each [block, n] slab is masked and
+      reduced with ``jax.lax.top_k`` immediately.
+    - ``"pallas"`` / ``"pallas_interpret"``: the fused masked top-k kernel
+      (kernels/sim_topk.py) — gram tile, same-client + target masking, and a
+      running top-k all stay in VMEM across column tiles.
+
+    ``flat_mask`` marks valid *source* rows; ``target_mask`` (defaults to
+    ``flat_mask``) marks slots allowed as link targets — the engine restricts
+    it to real local slots so imputed aug nodes are never re-linked.
+
+    Returns (scores [n, k], idx [n, k]); rows with mask 0 and unfilled
+    candidate slots get idx -1 / score 0.
     """
+    if target_mask is None:
+        target_mask = flat_mask
     n = h.shape[0]
-    same_client = client_ids[:, None] == client_ids[None, :]
-    num_blocks = (n + block - 1) // block
-    pad_n = num_blocks * block
-    h_pad = jnp.pad(h, ((0, pad_n - n), (0, 0)))
-    same_pad = jnp.pad(same_client, ((0, pad_n - n), (0, 0)), constant_values=True)
+    if kernel_impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+        scores, idx = kops.sim_topk(h, client_ids, target_mask, k,
+                                    block_m=block,
+                                    interpret=(kernel_impl == "pallas_interpret"))
+    elif kernel_impl == "reference":
+        same_client = client_ids[:, None] == client_ids[None, :]
+        num_blocks = (n + block - 1) // block
+        pad_n = num_blocks * block
+        h_pad = jnp.pad(h, ((0, pad_n - n), (0, 0)))
+        same_pad = jnp.pad(same_client, ((0, pad_n - n), (0, 0)),
+                           constant_values=True)
 
-    def one_block(bi):
-        rows = jax.lax.dynamic_slice_in_dim(h_pad, bi * block, block, axis=0)
-        if sim_impl in ("pallas", "pallas_interpret"):
-            from repro.kernels import ops as kops
-            gram = kops.sim_block(rows, h, interpret=(sim_impl == "pallas_interpret"))
-        else:
+        def one_block(bi):
+            rows = jax.lax.dynamic_slice_in_dim(h_pad, bi * block, block, axis=0)
             gram = rows @ h.T
-        same = jax.lax.dynamic_slice_in_dim(same_pad, bi * block, block, axis=0)
-        gram = jnp.where(same, -jnp.inf, gram)            # cross-subgraph only
-        gram = jnp.where(flat_mask[None, :] > 0, gram, -jnp.inf)  # real targets only
-        return jax.lax.top_k(gram, k)
+            same = jax.lax.dynamic_slice_in_dim(same_pad, bi * block, block, axis=0)
+            gram = jnp.where(same, -jnp.inf, gram)           # cross-subgraph only
+            gram = jnp.where(target_mask[None, :] > 0, gram, -jnp.inf)
+            return jax.lax.top_k(gram, k)
 
-    scores, idx = jax.lax.map(one_block, jnp.arange(num_blocks))
-    scores = scores.reshape(pad_n, k)[:n]
-    idx = idx.reshape(pad_n, k)[:n].astype(jnp.int32)
+        scores, idx = jax.lax.map(one_block, jnp.arange(num_blocks))
+        scores = scores.reshape(pad_n, k)[:n]
+        idx = idx.reshape(pad_n, k)[:n]
+    else:
+        raise ValueError(f"unknown kernel_impl {kernel_impl!r}; "
+                         f"expected one of {KERNEL_IMPLS}")
     valid = (flat_mask[:, None] > 0) & jnp.isfinite(scores)
-    idx = jnp.where(valid, idx, -1)
+    idx = jnp.where(valid, idx.astype(jnp.int32), -1)
     scores = jnp.where(valid, scores, 0.0)
     return scores, idx
+
+
+def local_slot_mask(num_clients: int, n_pad: int, n_local: int) -> jnp.ndarray:
+    """[num_clients*n_pad] mask of *real local* slots (aug slots excluded).
+
+    Link targets must come from this set: the graphic patcher sets
+    ``node_mask=1`` on augmented slots it fills, so masking targets with the
+    node mask alone would let later fixing rounds pick synthetic nodes as
+    cross-subgraph link targets (and re-impute already-imputed features).
+    """
+    local = (jnp.arange(n_pad) < n_local).astype(jnp.float32)
+    return jnp.tile(local, num_clients)
 
 
 # ---------------------------------------------------------------------------

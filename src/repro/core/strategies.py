@@ -182,7 +182,13 @@ class SpreadImputation:
 
     active = True
 
-    def impute(self, engine, state):
+    def server_outputs(self, engine, state):
+        """The vmapped [N] generator round, before graph fixing.
+
+        Returns ``((ae_params, ae_opt, as_params, as_opt, scores, idx,
+        x_bar), key)`` with per-server leading [N] axes and the advanced
+        round key — the raw link proposals the parity regressions inspect.
+        """
         batch = state.batch
         emb = engine._embeddings(state.params, batch)       # [M, n_pad, c]
         n_pad = batch.x.shape[1]
@@ -192,12 +198,17 @@ class SpreadImputation:
         keys = jax.random.split(state.key, n + 1)
         key, server_keys = keys[0], keys[1:]
         client_ids = imputation.client_of_flat(mp, n_pad)
-        (ae_params, ae_opt, as_params, as_opt, scores, idx, x_bar) = jax.vmap(
+        outs = jax.vmap(
             engine._server_round, in_axes=(0, 0, 0, 0, 0, 0, 0, None)
         )(server_keys, state.ae_params, state.ae_opt, state.as_params,
           state.as_opt, emb_g, mask_g, client_ids)
+        return outs, key
+
+    def impute(self, engine, state):
+        (ae_params, ae_opt, as_params, as_opt, scores, idx,
+         x_bar), key = self.server_outputs(engine, state)
         scores, idx, x_bar = patcher.stitch_server_links(scores, idx, x_bar)
-        batch = patcher.fix_graphs(batch, scores, idx, x_bar)
+        batch = patcher.fix_graphs(state.batch, scores, idx, x_bar)
         return dataclasses.replace(state, batch=batch, ae_params=ae_params,
                                    ae_opt=ae_opt, as_params=as_params,
                                    as_opt=as_opt, key=key)

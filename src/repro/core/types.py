@@ -106,6 +106,12 @@ class FGLConfig:
     gnn_kind: str = "sage"            # "sage" | "gcn" | "gat"
     dropout: float = 0.0
 
+    # Hot-path kernel implementation, threaded through both compute hot spots
+    # (gnn.aggregate in the client classifier and the fused similarity top-k
+    # of the imputation round): "reference" (jnp), "pallas" (TPU kernels), or
+    # "pallas_interpret" (the Pallas kernels in interpret mode — CPU parity).
+    kernel_impl: str = "reference"
+
     # Federated schedule (Algorithm 1).
     num_edge_servers: int = 1          # N  (1 => FedGL, >1 => SpreadFGL)
     clients_per_server: int = 6        # M_j

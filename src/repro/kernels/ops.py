@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
 from repro.kernels import sage_aggregate as _sage
 from repro.kernels import sim_topk as _sim
 
@@ -59,18 +60,39 @@ def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *, causal: bool = True,
     return out[:, :sq].reshape(b, hq, sq, d)
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
-                                             "interpret"))
-def sage_aggregate(adj: jnp.ndarray, h: jnp.ndarray, *, block_m: int = 128,
-                   block_n: int = 128, block_k: int = 128,
-                   interpret: bool = False) -> jnp.ndarray:
-    """Row-normalized neighbor aggregation; accepts arbitrary [n,n]/[n,d]."""
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _sage_aggregate(adj, h, block_m, block_n, block_k, interpret):
     n, d = h.shape
     adj_p = _pad_to(_pad_to(adj, 0, block_m), 1, block_k)
     h_p = _pad_to(_pad_to(h, 0, block_k), 1, block_n)
     out = _sage.sage_aggregate(adj_p, h_p, block_m=block_m, block_n=block_n,
                                block_k=block_k, interpret=interpret)
     return out[:n, :d]
+
+
+def _sage_aggregate_fwd(adj, h, block_m, block_n, block_k, interpret):
+    return _sage_aggregate(adj, h, block_m, block_n, block_k, interpret), (adj, h)
+
+
+def _sage_aggregate_bwd(block_m, block_n, block_k, interpret, res, g):
+    # pallas_call has no autodiff rule: kernel forward, oracle backward. The
+    # oracle computes the same clamped row-normalized mean, so its VJP is the
+    # exact gradient of what the kernel produced (classifier training takes
+    # grad through aggregation — see FGLTrainer._local_rounds).
+    adj, h = res
+    return jax.vjp(_ref.sage_aggregate, adj, h)[1](g)
+
+
+_sage_aggregate.defvjp(_sage_aggregate_fwd, _sage_aggregate_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def sage_aggregate(adj: jnp.ndarray, h: jnp.ndarray, *, block_m: int = 128,
+                   block_n: int = 128, block_k: int = 128,
+                   interpret: bool = False) -> jnp.ndarray:
+    """Row-normalized neighbor aggregation; accepts arbitrary [n,n]/[n,d]."""
+    return _sage_aggregate(adj, h, block_m, block_n, block_k, interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
@@ -85,3 +107,30 @@ def sim_block(rows: jnp.ndarray, h: jnp.ndarray, *, block_m: int = 128,
     out = _sim.sim_block(rows_p, h_p, block_m=block_m, block_n=block_n,
                          interpret=interpret)
     return out[:b, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_m", "block_n",
+                                             "interpret"))
+def sim_topk(h: jnp.ndarray, client_ids: jnp.ndarray, target_mask: jnp.ndarray,
+             k: int, *, block_m: int = 128, block_n: int = 512,
+             interpret: bool = False):
+    """Fused masked top-k similarity; accepts arbitrary [n,c]/[n]/[n].
+
+    Per row of h: the k most similar rows of h whose ``client_ids`` differ
+    and whose ``target_mask`` is set. Returns (vals [n, k] f32 with -inf on
+    missing candidates, idx [n, k] int32 with -1 where never filled).
+    Column padding gets mask 0, so padded slots can never be selected.
+    """
+    n = h.shape[0]
+    block_m = min(block_m, max(8, n))
+    block_n = min(block_n, max(8, n))
+    rows_p = _pad_to(h, 0, block_m)
+    h_p = _pad_to(h, 0, block_n)
+    cid = client_ids.astype(jnp.int32)
+    row_cid = _pad_to(cid[:, None], 0, block_m)
+    col_cid = _pad_to(cid[None, :], 1, block_n)
+    col_mask = _pad_to(target_mask.astype(jnp.float32)[None, :], 1, block_n)
+    vals, idx = _sim.sim_topk(rows_p, h_p, row_cid, col_cid, col_mask, k,
+                              block_m=block_m, block_n=block_n,
+                              interpret=interpret)
+    return vals[:n], idx[:n]

@@ -7,6 +7,10 @@ Every method resolves through ``repro.core.registry`` — the same strategy
 compositions the benchmarks and examples use. ``--save-state`` checkpoints
 the final ``FGLState``; ``--resume`` restores one and continues Algorithm 1
 at the checkpointed round (true resume, imputation schedule intact).
+``--impl`` selects the hot-path kernels for BOTH the per-client classifier
+aggregation and the imputation round's fused similarity top-k: ``reference``
+(jnp), ``pallas`` (TPU), or ``pallas_interpret`` (Pallas kernels in
+interpret mode — bitwise the same code path as ``pallas``, runnable on CPU).
 """
 from __future__ import annotations
 
@@ -37,6 +41,10 @@ def main() -> None:
     ap.add_argument("--feature-noise", type=float, default=3.0)
     ap.add_argument("--signal-ratio", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--impl", default="reference",
+                    choices=("reference", "pallas", "pallas_interpret"),
+                    help="hot-path kernels for classifier aggregation and the "
+                         "fused similarity top-k of the imputation round")
     ap.add_argument("--json-out", default="")
     ap.add_argument("--save-state", default="",
                     help="write the final FGLState to this .npz")
@@ -58,7 +66,10 @@ def main() -> None:
     cfg = FGLConfig(hidden_dim=32, local_rounds=args.local_rounds,
                     imputation_interval=args.imputation_interval,
                     top_k_links=args.top_k, aug_max=12,
-                    label_ratio=args.label_ratio)
+                    label_ratio=args.label_ratio, kernel_impl=args.impl)
+    if args.impl != "reference":
+        print(f"[fgl] kernel impl: {args.impl} (fused sim_topk + "
+              f"sage_aggregate Pallas kernels)")
     kw = {}
     if args.method == "SpreadFGL":
         kw["num_servers"] = args.servers

@@ -91,13 +91,18 @@ class TestGNN:
                                    atol=1e-5)
 
 
+IMPLS = ("reference", "pallas_interpret")
+
+
 class TestImputation:
-    def test_similarity_topk_cross_subgraph_only(self):
+    @pytest.mark.parametrize("kernel_impl", IMPLS)
+    def test_similarity_topk_cross_subgraph_only(self, kernel_impl):
         m, n_pad, c, k = 3, 8, 4, 3
         h = jax.random.normal(jax.random.key(0), (m * n_pad, c))
         mask = jnp.ones((m * n_pad,))
         cid = imputation.client_of_flat(m, n_pad)
-        scores, idx = imputation.similarity_topk(h, mask, cid, k, block=8)
+        scores, idx = imputation.similarity_topk(h, mask, cid, k, block=8,
+                                                 kernel_impl=kernel_impl)
         idx_np = np.asarray(idx)
         cid_np = np.asarray(cid)
         for u in range(m * n_pad):
@@ -106,14 +111,83 @@ class TestImputation:
                 if v >= 0:
                     assert cid_np[u] != cid_np[v], "intra-client link imputed"
 
-    def test_topk_masks_padding(self):
+    @pytest.mark.parametrize("kernel_impl", IMPLS)
+    def test_topk_masks_padding(self, kernel_impl):
         m, n_pad, c, k = 2, 6, 3, 2
         h = jax.random.normal(jax.random.key(0), (m * n_pad, c))
         mask = jnp.zeros((m * n_pad,)).at[:4].set(1.0)  # only client0 slots real
         cid = imputation.client_of_flat(m, n_pad)
-        scores, idx = imputation.similarity_topk(h, mask, cid, k, block=4)
+        scores, idx = imputation.similarity_topk(h, mask, cid, k, block=4,
+                                                 kernel_impl=kernel_impl)
         # real rows may only link to real slots
         assert np.all(np.asarray(idx)[np.asarray(idx) >= 0] < 6)
+
+    @pytest.mark.parametrize("kernel_impl", IMPLS)
+    def test_topk_k_exceeds_valid_candidates(self, kernel_impl):
+        """k > cross-subgraph candidate count: spare slots get idx -1/score 0."""
+        m, n_pad, c, k = 2, 4, 3, 6            # 4 cross candidates, k=6
+        h = jax.random.normal(jax.random.key(1), (m * n_pad, c))
+        mask = jnp.ones((m * n_pad,))
+        cid = imputation.client_of_flat(m, n_pad)
+        scores, idx = imputation.similarity_topk(h, mask, cid, k, block=4,
+                                                 kernel_impl=kernel_impl)
+        idx_np, sc_np = np.asarray(idx), np.asarray(scores)
+        assert idx_np.shape == (m * n_pad, k)
+        # exactly n_pad valid targets per row (the other client's slots)
+        assert (np.sum(idx_np >= 0, axis=1) == n_pad).all()
+        assert ((idx_np[:, n_pad:] == -1) & (sc_np[:, n_pad:] == 0.0)).all()
+        assert np.isfinite(sc_np).all()
+
+    @pytest.mark.parametrize("kernel_impl", IMPLS)
+    def test_topk_fully_masked_rows(self, kernel_impl):
+        """Rows with mask 0 / zero valid targets yield all idx -1, score 0."""
+        m, n_pad, c, k = 2, 4, 3, 2
+        h = jax.random.normal(jax.random.key(2), (m * n_pad, c))
+        mask = jnp.zeros((m * n_pad,))          # nothing is real
+        cid = imputation.client_of_flat(m, n_pad)
+        scores, idx = imputation.similarity_topk(h, mask, cid, k, block=4,
+                                                 kernel_impl=kernel_impl)
+        assert np.all(np.asarray(idx) == -1)
+        assert np.all(np.asarray(scores) == 0.0)
+
+    @pytest.mark.parametrize("kernel_impl", IMPLS)
+    def test_topk_target_mask_restricts_targets(self, kernel_impl):
+        """target_mask shrinks the candidate set without masking source rows."""
+        m, n_pad, c, k = 2, 6, 3, 2
+        n_local = 4
+        h = jax.random.normal(jax.random.key(3), (m * n_pad, c))
+        mask = jnp.ones((m * n_pad,))           # every slot is a valid source
+        tmask = mask * imputation.local_slot_mask(m, n_pad, n_local)
+        cid = imputation.client_of_flat(m, n_pad)
+        scores, idx = imputation.similarity_topk(
+            h, mask, cid, k, block=4, kernel_impl=kernel_impl,
+            target_mask=tmask)
+        idx_np = np.asarray(idx)
+        chosen = idx_np[idx_np >= 0]
+        assert (chosen % n_pad < n_local).all()  # no aug-slot targets
+        assert (np.sum(idx_np >= 0, axis=1) > 0).all()  # rows still link
+
+    def test_topk_unknown_impl_rejected(self):
+        h = jnp.zeros((4, 2))
+        with pytest.raises(ValueError, match="kernel_impl"):
+            imputation.similarity_topk(h, jnp.ones(4),
+                                       jnp.zeros(4, jnp.int32), 1,
+                                       kernel_impl="cuda")
+
+    @pytest.mark.parametrize("kernel_impl", IMPLS)
+    def test_topk_impls_agree(self, kernel_impl):
+        """Both impls agree with each other on a mixed-mask problem."""
+        m, n_pad, c, k = 3, 10, 5, 4           # n=30: not a block multiple
+        h = jax.random.normal(jax.random.key(4), (m * n_pad, c))
+        mask = (jax.random.uniform(jax.random.key(5), (m * n_pad,)) < 0.8
+                ).astype(jnp.float32)
+        cid = imputation.client_of_flat(m, n_pad)
+        s_ref, i_ref = imputation.similarity_topk(h, mask, cid, k, block=8,
+                                                  kernel_impl="reference")
+        s, i = imputation.similarity_topk(h, mask, cid, k, block=8,
+                                          kernel_impl=kernel_impl)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
 
     def test_autoencoder_roundtrip_shapes(self):
         c, d = 5, 17

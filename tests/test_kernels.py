@@ -91,6 +91,80 @@ def test_sim_block_gram_symmetry():
                                atol=1e-5, rtol=1e-5)
 
 
+def _sim_topk_oracle(h, cid, tmask, k):
+    """Unfused ground truth: full masked gram + jax.lax.top_k."""
+    gram = h.astype(jnp.float32) @ h.astype(jnp.float32).T
+    gram = jnp.where(cid[:, None] == cid[None, :], -jnp.inf, gram)
+    gram = jnp.where(tmask[None, :] > 0, gram, -jnp.inf)
+    return jax.lax.top_k(gram, k)
+
+
+@pytest.mark.parametrize("n,c,k,bm,bn", [
+    (64, 5, 3, 16, 32),
+    (128, 15, 5, 128, 512),     # block-multiple fast path
+    (100, 7, 5, 32, 64),        # non-block-multiple n
+    (37, 4, 3, 8, 16),          # tiny + non-multiple
+])
+def test_sim_topk_fused_matches_oracle(n, c, k, bm, bn):
+    ks = jax.random.split(jax.random.fold_in(KEY, n + c), 2)
+    h = _rand(ks[0], (n, c), jnp.float32)
+    cid = (jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0) // max(n // 4, 1)
+           ).squeeze(-1)
+    tmask = (jax.random.uniform(ks[1], (n,)) < 0.7).astype(jnp.float32)
+    vals, idx = ops.sim_topk(h, cid, tmask, k, block_m=bm, block_n=bn,
+                             interpret=True)
+    ovals, oidx = _sim_topk_oracle(h, cid, tmask, k)
+    fin = np.isfinite(np.asarray(ovals))
+    np.testing.assert_allclose(np.asarray(vals)[fin], np.asarray(ovals)[fin],
+                               atol=1e-5, rtol=1e-5)
+    # idx only comparable where the score is real; the fused kernel keeps -1
+    # on unfilled slots while top_k emits arbitrary indices there.
+    np.testing.assert_array_equal(np.asarray(idx)[fin], np.asarray(oidx)[fin])
+    assert np.all(np.isneginf(np.asarray(vals)[~fin]))
+    assert np.all(np.asarray(idx)[~fin] == -1)
+
+
+def test_sim_topk_fused_fully_masked_rows_keep_minus_one():
+    n, c, k = 24, 4, 3
+    h = _rand(KEY, (n, c), jnp.float32)
+    cid = jnp.zeros((n,), jnp.int32)            # everything same client
+    vals, idx = ops.sim_topk(h, cid, jnp.ones((n,)), k, block_m=8, block_n=8,
+                             interpret=True)
+    assert np.all(np.asarray(idx) == -1)
+    assert np.all(np.isneginf(np.asarray(vals)))
+
+
+def test_sim_topk_fused_unfilled_slots_stay_minus_one_across_tiles():
+    """One valid candidate, k=3, several column tiles: the merge must not
+    resurrect stale indices for exhausted slots in later tiles."""
+    n, c, k = 32, 4, 3
+    h = _rand(KEY, (n, c), jnp.float32)
+    cid = jnp.zeros((n,), jnp.int32).at[5].set(1)   # node 5 is the only target
+    vals, idx = ops.sim_topk(h, cid, jnp.ones((n,)), k, block_m=8, block_n=16,
+                             interpret=True)
+    idx_np, vals_np = np.asarray(idx), np.asarray(vals)
+    assert np.all(idx_np[:5, 0] == 5) and np.all(idx_np[6:, 0] == 5)
+    assert np.all(idx_np[:, 1:][np.isneginf(vals_np[:, 1:])] == -1)
+    assert np.all(vals_np[:5, 1:] == -np.inf)
+
+
+def test_sim_topk_fused_under_vmap():
+    """The [N] server axis: vmapped fused kernel == per-slice calls."""
+    n_srv, n, c, k = 3, 40, 5, 4
+    h = _rand(KEY, (n_srv, n, c), jnp.float32)
+    cid = jnp.repeat(jnp.arange(2, dtype=jnp.int32), n // 2)
+    tmask = jnp.ones((n,))
+    f = jax.vmap(lambda hj: ops.sim_topk(hj, cid, tmask, k, block_m=8,
+                                         block_n=16, interpret=True))
+    vals, idx = f(h)
+    for j in range(n_srv):
+        v_j, i_j = ops.sim_topk(h[j], cid, tmask, k, block_m=8, block_n=16,
+                                interpret=True)
+        np.testing.assert_allclose(np.asarray(vals[j]), np.asarray(v_j),
+                                   atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(idx[j]), np.asarray(i_j))
+
+
 class TestKernelPipelineIntegration:
     """Kernels swapped into the real FGL pipeline (interpret mode)."""
 
@@ -119,9 +193,9 @@ class TestKernelPipelineIntegration:
         fm = jnp.ones((64,))
         cid = imputation.client_of_flat(4, 16)
         s1, i1 = imputation.similarity_topk(h, fm, cid, 3,
-                                            sim_impl="reference", block=32)
+                                            kernel_impl="reference", block=32)
         s2, i2 = imputation.similarity_topk(h, fm, cid, 3,
-                                            sim_impl="pallas_interpret",
+                                            kernel_impl="pallas_interpret",
                                             block=32)
         np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-5)
         np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
