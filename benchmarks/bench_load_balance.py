@@ -26,8 +26,11 @@ if __name__ == "__main__":  # must precede the first jax import
 import jax
 import numpy as np
 
-from benchmarks.common import fgl_setup, timeit, write_result
-from repro.core.spreadfgl import make_fedgl, make_spreadfgl
+from benchmarks.common import ROUNDS, fgl_setup, timeit, write_result
+from repro.core import gossip
+from repro.core.partition import ring_adjacency
+from repro.core.spreadfgl import (make_fedgl, make_spreadfgl,
+                                  make_spreadfgl_gossip)
 from repro.launch.mesh import make_edge_mesh
 
 
@@ -49,9 +52,11 @@ def main(fast: bool = False):
         pb = param_bytes(tr, batch)
         m_per = tr.m_per
         n = tr.n_servers
-        # per round: up + down per covered client; + 2 neighbors on K-rounds
+        # per round: up + down per covered client; + neighbor exchange on
+        # K-rounds (byte math shared with core/gossip.py).
         per_round = 2 * m_per * pb
-        neighbor = (2 * pb if n > 1 else 0) / cfg.imputation_interval
+        neighbor = gossip.dense_neighbor_bytes_per_round(
+            ring_adjacency(n), pb, every=cfg.imputation_interval)
         out[name] = {"servers": n, "clients_per_server": m_per,
                      "param_bytes": pb,
                      "per_server_bytes_per_round": per_round + neighbor,
@@ -64,7 +69,91 @@ def main(fast: bool = False):
     print(f"  peak-load reduction: {ratio:.2f}x")
     out["imputation_walltime"] = bench_imputation_walltime(fast=fast)
     out["impl_sweep"] = bench_impl_sweep(fast=fast)
+    out["gossip"] = bench_gossip_aggregation(fast=fast)
     write_result("load_balance", out)
+    return out
+
+
+def bench_gossip_aggregation(fast: bool = False):
+    """Gossip-K vs dense Eq. 16 vs FedAvg: bytes/round, wall time, convergence.
+
+    For N ∈ {1, 2, 4, 8} edge servers, reports per-server cross-server
+    bytes/round (amortized over the exchange interval; math from
+    ``core/gossip.py``) and the measured wall time of one aggregation call —
+    on exchange rounds AND on skip rounds, where the gossip aggregator
+    lowers to per-server FedAvg with zero cross-server collectives. A
+    convergence sweep at a representative N records full accuracy/F1
+    histories for gossip-K ∈ {1, 4, 8} against dense neighbor aggregation
+    and single-point FedGL. Own results file:
+    ``results/gossip_load_balance.json``.
+    """
+    n_dev = len(jax.devices())
+    print(f"[bench] gossip aggregation (K-amortized exchange) on {n_dev} "
+          f"device(s)")
+    _, batch, cfg = fgl_setup("cora", 8)   # 8 clients: N in {1,2,4,8} divide
+    iters = 2 if fast else 5
+    ks = (1, 4, 8)
+    out = {"devices": n_dev, "gossip_K": list(ks)}
+
+    for n in ((1, 2) if fast else (1, 2, 4, 8)):
+        mesh = make_edge_mesh(n) if (n > 1 and n_dev > 1) else None
+        tr_d = (make_fedgl(cfg, batch) if n == 1
+                else make_spreadfgl(cfg, batch, num_servers=n, edge_mesh=mesh))
+        pb = param_bytes(tr_d, batch)
+        out.setdefault("param_bytes", pb)
+        adj = ring_adjacency(n)
+        state_d = tr_d.init(jax.random.key(0), batch)
+        rows = {"dense_neighbor": {
+            "cross_server_bytes_per_round":
+                gossip.dense_neighbor_bytes_per_round(adj, pb),
+            "agg_round_us": timeit(
+                lambda: tr_d.aggregate(state_d.params, round=0), iters=iters)},
+            "fedavg_allreduce": {
+            "cross_server_bytes_per_round":
+                gossip.allreduce_bytes_per_round(pb, n)}}
+        for k in ks:
+            tr_g = make_spreadfgl_gossip(cfg, batch, num_servers=n,
+                                         gossip_every=k, edge_mesh=mesh)
+            state_g = tr_g.init(jax.random.key(0), batch)
+            t_ex = timeit(lambda: tr_g.aggregate(state_g.params, round=k - 1),
+                          iters=iters)
+            t_skip = (t_ex if k == 1 else
+                      timeit(lambda: tr_g.aggregate(state_g.params, round=0),
+                             iters=iters))
+            bytes_pr = (gossip.ring_gossip_bytes_per_round(pb, every=k)
+                        if n >= 3 else
+                        gossip.dense_neighbor_bytes_per_round(adj, pb, every=k))
+            rows[f"gossip_K{k}"] = {
+                "cross_server_bytes_per_round": bytes_pr,
+                "exchange_round_us": t_ex, "skip_round_us": t_skip,
+                "amortized_round_us": (t_ex + (k - 1) * t_skip) / k}
+            print(f"  N={n} gossip K={k}: bytes/round {bytes_pr/1e3:8.2f} kB  "
+                  f"exchange {t_ex/1e3:7.2f} ms  skip {t_skip/1e3:7.2f} ms")
+        dense_b = rows["dense_neighbor"]["cross_server_bytes_per_round"]
+        for k in ks:
+            gb = rows[f"gossip_K{k}"]["cross_server_bytes_per_round"]
+            rows[f"gossip_K{k}"]["bytes_vs_dense"] = (
+                gb / dense_b if dense_b else 1.0)
+        out[f"N={n}"] = rows
+
+    # Convergence: does K-amortized exchange track dense aggregation?
+    n_conv = 2 if fast else 4
+    rounds = 4 if fast else ROUNDS
+    conv = {"servers": n_conv, "rounds": rounds}
+    mesh = make_edge_mesh(n_conv) if (n_conv > 1 and n_dev > 1) else None
+    runs = [("FedGL", lambda: make_fedgl(cfg, batch)),
+            ("dense_neighbor", lambda: make_spreadfgl(
+                cfg, batch, num_servers=n_conv, edge_mesh=mesh))]
+    runs += [(f"gossip_K{k}", lambda k=k: make_spreadfgl_gossip(
+        cfg, batch, num_servers=n_conv, gossip_every=k, edge_mesh=mesh))
+        for k in ks]
+    for name, make in runs:
+        _, hist = make().fit(jax.random.key(0), batch, rounds=rounds)
+        conv[name] = hist
+        print(f"  convergence N={n_conv} {name:14s} "
+              f"best acc={max(hist['acc']):.3f} f1={max(hist['f1']):.3f}")
+    out["convergence"] = conv
+    write_result("gossip_load_balance", out)
     return out
 
 

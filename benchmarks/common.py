@@ -47,6 +47,7 @@ _REGISTRY_NAMES = {
     "FedSage+": ("fedsage_plus", {}),
     "FedGL": ("FedGL", {}),
     "SpreadFGL": ("SpreadFGL", {"num_servers": 3}),
+    "SpreadFGL-gossip": ("spreadfgl_gossip", {"num_servers": 3}),
 }
 
 

@@ -3,11 +3,13 @@
   PYTHONPATH=src python examples/spreadfgl_multiserver.py [--impl pallas]
 
 Three edge servers on a ring (the paper's testbed topology), Eq. 16 neighbor
-aggregation + Eq. 15 trace regularizer, compared against the centralized FedGL
-and the three baselines of Sec. IV-A on the same partition. ``--impl``
-selects the hot-path kernels (reference | pallas | pallas_interpret) for
-every method — the single ``FGLConfig.kernel_impl`` knob covers both
-classifier aggregation and the imputation round's fused similarity top-k.
+aggregation + Eq. 15 trace regularizer, compared against the centralized
+FedGL, the decentralized gossip variant (``spreadfgl_gossip``, cross-server
+exchange every ``--gossip-every`` rounds only), and the three baselines of
+Sec. IV-A on the same partition. ``--impl`` selects the hot-path kernels
+(reference | pallas | pallas_interpret) for every method — the single
+``FGLConfig.kernel_impl`` knob covers both classifier aggregation and the
+imputation round's fused similarity top-k.
 """
 import argparse
 
@@ -24,6 +26,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--impl", default="reference",
                     choices=("reference", "pallas", "pallas_interpret"))
+    ap.add_argument("--gossip-every", type=int, default=4,
+                    help="cross-server exchange interval of the gossip row")
     args = ap.parse_args()
 
     graph = make_sbm_graph(DATASETS["citeseer"], scale=0.15, seed=1,
@@ -43,6 +47,9 @@ def main():
         "FedGL": registry.build("FedGL", cfg, batch),
         "SpreadFGL (3 servers, ring)": registry.build(
             "SpreadFGL", cfg, batch, num_servers=3, edge_mesh=mesh),
+        f"SpreadFGL-gossip (K={args.gossip_every})": registry.build(
+            "spreadfgl_gossip", cfg, batch, num_servers=3,
+            gossip_every=args.gossip_every, edge_mesh=mesh),
     }
     print(f"{'method':30s} {'best ACC':>9s} {'best F1':>9s} {'final loss':>11s}")
     for name, tr in methods.items():

@@ -9,7 +9,11 @@ arrays are serialized via ``jax.random.key_data`` and re-wrapped on restore.
 A restored ``FGLState`` is directly resumable: Python-scalar leaves in the
 template (e.g. ``FGLState.round``) come back as Python scalars, so
 ``trainer.fit(state=io.restore(path, trainer.init(key, batch)))`` continues
-Algorithm 1 at the checkpointed round with the imputation schedule intact.
+Algorithm 1 at the checkpointed round with the imputation schedule intact —
+and, for gossip compositions, the cross-server exchange phase too: both
+schedules are pure functions of the absolute round (``round % K``), so no
+extra state needs serializing (``tests/test_gossip.py`` pins the
+mid-interval round-trip).
 """
 from __future__ import annotations
 

@@ -133,9 +133,16 @@ class FGLTrainer:
             raise ValueError(f"N={self.n_servers} servers must divide across the "
                              f"{edge_mesh.size}-device edge mesh")
         self._local_fn = jax.jit(self._local_rounds)
+        # Round-scheduled aggregators (GossipAggregator) expose a `period`;
+        # step() passes the canonicalized phase (`_agg_phase`) as a STATIC
+        # arg, so jit compiles exactly 2 variants — exchange and skip — and
+        # non-exchange rounds lower to zero cross-server collectives.
+        # Unscheduled aggregators have period 1.
+        self._agg_period = max(1, int(getattr(self.aggregator, "period", 1)))
         self._agg_fn = jax.jit(functools.partial(
             self.aggregator.aggregate, adj=self.adj_servers,
-            num_servers=self.n_servers, m_per=self.m_per))
+            num_servers=self.n_servers, m_per=self.m_per),
+            static_argnames=("round",))
         self._impute_fn = jax.jit(functools.partial(self.imputation.impute, self))
         self._eval_fn = jax.jit(self._evaluate)
 
@@ -198,9 +205,25 @@ class FGLTrainer:
 
     # -- aggregation (strategy) ----------------------------------------------
 
-    def aggregate(self, params: PyTree) -> PyTree:
-        """Apply this trainer's Aggregator to stacked client classifiers."""
-        return self._agg_fn(params)
+    def _agg_phase(self, t: int) -> int:
+        """Canonical static phase for the jitted aggregation call.
+
+        Only two behaviors exist — exchange round or skip round — so the
+        phase is canonicalized to ``period - 1`` (exchange) or ``0`` (skip):
+        exactly 2 compiled variants regardless of K, instead of one cache
+        entry per distinct ``t % period``.
+        """
+        p = self._agg_period
+        return p - 1 if (t + 1) % p == 0 else 0
+
+    def aggregate(self, params: PyTree, *, round: int = 0) -> PyTree:
+        """Apply this trainer's Aggregator to stacked client classifiers.
+
+        ``round`` matters only for round-scheduled aggregators (gossip every
+        K); it is canonicalized to the exchange/skip phase before the jitted
+        call.
+        """
+        return self._agg_fn(params, round=self._agg_phase(int(round)))
 
     # -- imputation helpers shared by the strategies --------------------------
 
@@ -345,7 +368,10 @@ class FGLTrainer:
             state.params, state.opt_state, state.batch)
         if self.imputation.active and (t % self.cfg.imputation_interval == 0):
             state = self._impute_fn(state)
-        state.params = self._agg_fn(state.params)
+        # The gossip phase is a pure function of the absolute round, so a
+        # state restored mid-interval resumes the exchange schedule exactly
+        # where the checkpoint left it.
+        state.params = self._agg_fn(state.params, round=self._agg_phase(t))
         loss, acc, f1 = self._eval_fn(state.params, state.batch)
         state.round = t + 1
         return state, {"round": t, "loss": loss, "acc": acc, "f1": f1}

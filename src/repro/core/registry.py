@@ -8,6 +8,11 @@ Topology, an Aggregator, and an ImputationStrategy (see
     from repro.core import registry
     trainer = registry.build("SpreadFGL", cfg, batch, num_servers=3)
 
+Stock methods (see ``docs/PAPER_MAP.md`` for the paper mapping):
+``FedGL``, ``SpreadFGL``, ``spreadfgl_gossip`` (decentralized gossip
+aggregation over the edge mesh, Sec. III-E), ``local``, ``fedavg_fusion``,
+``fedsage_plus``.
+
 Builders register themselves at import time via :func:`register`; resolving a
 name lazily imports the modules that define the stock methods
 (``repro.core.spreadfgl`` and ``repro.core.baselines``), so importing this

@@ -9,6 +9,11 @@ registered in :mod:`repro.core.registry`:
 - ``make_spreadfgl`` (``"SpreadFGL"``): N edge servers (3 in the paper's
   testbed) on a ring — or any custom adjacency — Eq. 16 neighbor
   aggregation, Eq. 15 trace regularizer, SpreadFGL generator round.
+- ``make_spreadfgl_gossip`` (``"spreadfgl_gossip"``): same composition but
+  with :class:`~repro.core.strategies.GossipAggregator` — cross-server
+  parameter exchange only every K rounds (``cfg.gossip_every`` /
+  ``gossip_every=``), executed on the edge mesh when one is supplied. K=1
+  reproduces ``"SpreadFGL"`` exactly (see ``tests/test_gossip.py``).
 """
 from __future__ import annotations
 
@@ -42,3 +47,33 @@ def make_spreadfgl(cfg: FGLConfig, batch: ClientBatch, *, num_servers: int = 3,
     return FGLTrainer(cfg, batch, topology=topology,
                       aggregator=S.NeighborAggregator(),
                       imputation=S.SpreadImputation(), **kw)
+
+
+@register("spreadfgl_gossip")
+def make_spreadfgl_gossip(cfg: FGLConfig, batch: ClientBatch, *,
+                          num_servers: int = 3, gossip_every: Optional[int] = None,
+                          adjacency: Optional[np.ndarray] = None,
+                          edge_mesh=None, **kw) -> FGLTrainer:
+    """SpreadFGL with decentralized gossip training at the edge (Sec. III-E).
+
+    Identical to ``"SpreadFGL"`` except aggregation: servers FedAvg their own
+    clients every round but exchange parameters with topology neighbors only
+    every ``gossip_every`` rounds (default ``cfg.gossip_every``), via
+    collective_permute on the edge mesh when ``edge_mesh`` is given. With
+    ``gossip_every=1`` the histories match ``"SpreadFGL"`` to float32
+    tolerance (pinned in ``tests/test_gossip.py``).
+    """
+    every = int(gossip_every) if gossip_every is not None else cfg.gossip_every
+    if adjacency is not None:
+        if adjacency.shape[0] != num_servers:
+            raise ValueError(f"adjacency is {adjacency.shape[0]}x"
+                             f"{adjacency.shape[1]} but num_servers={num_servers}")
+        topology: S.Topology = S.CustomTopology(adjacency)
+        kind = "adjacency"
+    else:
+        topology = S.RingTopology(num_servers)
+        kind = "ring"
+    aggregator = S.GossipAggregator(topology=kind, every_k=every,
+                                    mesh=edge_mesh)
+    return FGLTrainer(cfg, batch, topology=topology, aggregator=aggregator,
+                      imputation=S.SpreadImputation(), edge_mesh=edge_mesh, **kw)

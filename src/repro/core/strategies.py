@@ -9,8 +9,11 @@ implementations here:
   SpreadFGL's testbed, custom adjacency = anything else). AdaFGL-style
   variants swap this axis.
 - :class:`Aggregator` — how client classifiers are combined each round
-  (FedAvg, Eq. 16 neighbor aggregation, identity for purely local training).
-  FedGTA-style variants swap this axis.
+  (FedAvg, Eq. 16 neighbor aggregation, gossip-SGD over the edge mesh,
+  identity for purely local training). FedGTA-style variants swap this
+  axis. Aggregators that schedule cross-server exchanges (gossip every K
+  rounds) advertise a ``period``; the engine passes ``round`` canonicalized
+  to the exchange/skip phase so jit sees exactly 2 static variants.
 - :class:`ImputationStrategy` — what happens on the every-K graph-fixing
   round (the SpreadFGL generator round, FedSage+'s local neighbor
   generation, or nothing).
@@ -53,6 +56,9 @@ class TopologyLayout:
 
 @runtime_checkable
 class Topology(Protocol):
+    """Client→edge-server layout + server-server adjacency a_rj (Eq. 16,
+    Sec. III-E); resolved once per trainer for a concrete client count."""
+
     def build(self, num_clients: int) -> TopologyLayout: ...
 
 
@@ -83,7 +89,8 @@ class RingTopology:
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class CustomTopology:
-    """Arbitrary server-server adjacency; clients grouped contiguously."""
+    """Arbitrary server-server adjacency a_rj (Eq. 16 supports any weights;
+    AdaFGL-style variants supply theirs here); clients grouped contiguously."""
 
     adjacency: np.ndarray
 
@@ -104,23 +111,34 @@ class CustomTopology:
 
 @runtime_checkable
 class Aggregator(Protocol):
+    """Combine stacked [M] client classifiers once per global round.
+
+    ``round`` is the global round index; the engine canonicalizes it before
+    the jitted call (``FGLTrainer._agg_phase``: ``period - 1`` on exchange
+    rounds, ``0`` otherwise) — a static Python int, so round-scheduled
+    aggregators compile exactly two variants, not one per round. Aggregators
+    without a schedule (``period`` 1) ignore it.
+    """
+
     def aggregate(self, params: PyTree, *, adj: jnp.ndarray,
-                  num_servers: int, m_per: int) -> PyTree: ...
+                  num_servers: int, m_per: int, round: int = 0) -> PyTree: ...
 
 
 @dataclasses.dataclass(frozen=True)
 class IdentityAggregator:
-    """No aggregation: clients keep their own weights (LocalFGL)."""
+    """No aggregation: clients keep their own weights (LocalFGL, Sec. IV-A)."""
 
-    def aggregate(self, params, *, adj, num_servers, m_per):
+    def aggregate(self, params, *, adj, num_servers, m_per, round=0):
         return params
 
 
 @dataclasses.dataclass(frozen=True)
 class FedAvgAggregator:
-    """Per-server FedAvg: mean over covered clients, broadcast back."""
+    """Per-server FedAvg (McMahan et al.): mean over covered clients,
+    broadcast back — classic FGL's single aggregation point when N = 1
+    (FedGL, Sec. III-B)."""
 
-    def aggregate(self, params, *, adj, num_servers, m_per):
+    def aggregate(self, params, *, adj, num_servers, m_per, round=0):
         def agg(leaf):
             grouped = leaf.reshape((num_servers, m_per) + leaf.shape[1:])
             w = jnp.sum(grouped, axis=1) / m_per
@@ -130,13 +148,18 @@ class FedAvgAggregator:
 
 @dataclasses.dataclass(frozen=True)
 class NeighborAggregator:
-    """Eq. 16: each server averages over itself and its topology neighbors,
+    """Eq. 16 (Sec. III-E): each server averages itself and its topology
+    neighbors *densely, every round*:
 
     W_j = sum_r a_rj * sum_i W_(r,i) / sum_r a_rj M_r — the SpreadFGL rule
-    that removes the single aggregation point.
+    that removes the single aggregation point. :class:`GossipAggregator`
+    computes the identical update on exchange rounds but amortizes the
+    cross-server traffic over K rounds; with ``every_k=1`` on the same
+    adjacency the two are numerically interchangeable
+    (``tests/test_gossip.py`` pins the allclose).
     """
 
-    def aggregate(self, params, *, adj, num_servers, m_per):
+    def aggregate(self, params, *, adj, num_servers, m_per, round=0):
         def agg(leaf):
             grouped = leaf.reshape((num_servers, m_per) + leaf.shape[1:])
             client_sum = jnp.sum(grouped, axis=1)              # [N, ...]
@@ -147,12 +170,97 @@ class NeighborAggregator:
         return jax.tree.map(agg, params)
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class GossipAggregator:
+    """Sec. III-E load balancing as gossip-SGD over the edge mesh.
+
+    Each round every server FedAvg-aggregates its own covered clients
+    (edge-client traffic only); cross-server parameter exchange happens
+    only every ``every_k`` rounds, with topology neighbors (Eq. 16 weights)
+    rather than a dense all-to-all — the decentralized-training reading of
+    the paper's Fig. 8/9 convergence claim, a la FedGTA's topology-aware
+    averaging. Per-round cross-server bytes drop from every-round dense
+    Eq. 16 to 2·|W|/K (``core.gossip.ring_gossip_bytes_per_round``).
+
+    ``topology`` picks the exchange kernel: ``"ring"`` uses
+    :func:`repro.core.gossip.block_ring_gossip`'s boundary-slice
+    ``collective_permute`` schedule (N ≥ 3; N ≤ 2 falls back to the
+    adjacency path, where a 2-ring's double edge would otherwise be
+    over-counted), ``"adjacency"`` uses
+    :func:`repro.core.gossip.adjacency_gossip` (all_gather + Eq. 16 mix)
+    for star/custom wiring. With ``mesh`` set (``make_edge_mesh``) the
+    exchange runs under ``shard_map`` over the mesh's [N] axis, so the
+    neighbor bytes genuinely cross the (emulated) device boundary.
+
+    Equivalences, both pinned in ``tests/test_gossip.py``:
+
+    - ``GossipAggregator(every_k=1)`` == :class:`NeighborAggregator` on the
+      same adjacency (ring or custom), to float32 tolerance.
+    - On non-exchange rounds it equals :class:`FedAvgAggregator` applied
+      per server.
+
+    The gossip round-phase is ``state.round % every_k`` — a pure function
+    of the checkpointed round, so save/resume mid-interval keeps the
+    exchange schedule intact.
+    """
+
+    topology: str = "ring"        # "ring" | "adjacency"
+    every_k: int = 1
+    mesh: Any = None              # optional jax Mesh carrying the [N] axis
+
+    def __post_init__(self):
+        if self.topology not in ("ring", "adjacency"):
+            raise ValueError(f"unknown gossip topology {self.topology!r}; "
+                             f"expected 'ring' or 'adjacency'")
+        if self.every_k < 1:
+            raise ValueError(f"every_k must be >= 1, got {self.every_k}")
+
+    @property
+    def period(self) -> int:
+        """Exchange schedule length; the engine passes ``round`` mod this."""
+        return self.every_k
+
+    def aggregate(self, params, *, adj, num_servers, m_per, round=0):
+        def server_mean(leaf):
+            grouped = leaf.reshape((num_servers, m_per) + leaf.shape[1:])
+            return jnp.sum(grouped, axis=1) / m_per
+
+        w = jax.tree.map(server_mean, params)                  # [N, ...]
+        if num_servers > 1 and (round + 1) % self.every_k == 0:
+            w = self._exchange(w, adj, num_servers)
+        return jax.tree.map(lambda leaf: jnp.repeat(leaf, m_per, axis=0), w)
+
+    def _exchange(self, w: PyTree, adj, num_servers: int) -> PyTree:
+        from repro.core import gossip
+
+        use_ring = self.topology == "ring" and num_servers >= 3
+        if self.mesh is not None and self.mesh.size > 1:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            axis = self.mesh.axis_names[0]
+
+            def ex(blk):
+                if use_ring:
+                    return gossip.block_ring_gossip(blk, axis)
+                return gossip.adjacency_gossip(blk, adj, axis)
+
+            return shard_map(ex, mesh=self.mesh, in_specs=(P(axis),),
+                             out_specs=P(axis), check_rep=False)(w)
+        if use_ring:
+            return gossip.block_ring_gossip(w)
+        return gossip.adjacency_gossip(w, adj)
+
+
 # ---------------------------------------------------------------------------
 # ImputationStrategy: the every-K graph-fixing round.
 # ---------------------------------------------------------------------------
 
 @runtime_checkable
 class ImputationStrategy(Protocol):
+    """The every-K graph-fixing round (Algorithm 1 lines 11-24 for
+    SpreadFGL; FedSage+'s local generation; or nothing). ``active=False``
+    lets the engine skip the round entirely."""
+
     active: bool
 
     def impute(self, engine, state): ...

@@ -118,6 +118,12 @@ class FGLConfig:
     local_rounds: int = 10             # T_l
     global_rounds: int = 30            # T_g
     imputation_interval: int = 5       # K
+    # Cross-server exchange interval for the gossip aggregator (Sec. III-E
+    # distributed training): servers trade parameters with topology
+    # neighbors every `gossip_every` rounds instead of dense per-round
+    # Eq. 16 averaging. 1 == exchange every round (== NeighborAggregator on
+    # the same adjacency). Only consumed by `spreadfgl_gossip` compositions.
+    gossip_every: int = 1
     ae_iters: int = 5                  # T_ae
     assessor_iters: int = 3           # T_as
     ae_outer_iters: int = 3            # "while not convergent" outer loop bound

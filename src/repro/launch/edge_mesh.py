@@ -24,10 +24,18 @@ their slice of the similarity/top-k work.
   # 4 emulated host devices, 4 edge servers, one server per device:
   PYTHONPATH=src python -m repro.launch.edge_mesh --devices 4 --servers 4
 
+  # Decentralized gossip training: neighbor exchange every 4 rounds only,
+  # executed as collective_permute across the mesh (Sec. III-E):
+  PYTHONPATH=src python -m repro.launch.edge_mesh --devices 4 --servers 4 \\
+      --gossip-every 4
+
 On a 1-device host the mesh degenerates to size 1 (plain vmap) — same
 numbers, no sharding. The ``--devices`` flag must be handled before the first
 jax import (jax locks the device count on first initialization), hence the
-header above.
+header above. ``--gossip-every 0`` (the default) keeps dense per-round
+Eq. 16 neighbor aggregation; any K >= 1 switches to the
+``spreadfgl_gossip`` composition (K=1 is numerically the dense rule with
+the exchange routed through the mesh collectives).
 """
 import argparse
 import time
@@ -35,7 +43,7 @@ import time
 import jax
 
 from repro.core.partition import partition_graph
-from repro.core.spreadfgl import make_spreadfgl
+from repro.core.spreadfgl import make_spreadfgl, make_spreadfgl_gossip
 from repro.core.types import FGLConfig
 from repro.data.synthetic_graphs import DATASETS, make_sbm_graph
 from repro.launch.mesh import make_edge_mesh
@@ -49,6 +57,9 @@ def main() -> None:
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--servers", type=int, default=4)
     ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--gossip-every", type=int, default=0,
+                    help="cross-server exchange interval K (0 = dense "
+                         "per-round Eq. 16 aggregation)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -60,8 +71,17 @@ def main() -> None:
                            feature_noise=3.0, signal_ratio=0.5)
     batch, _ = partition_graph(graph, args.clients, aug_max=12, seed=args.seed)
     cfg = FGLConfig(hidden_dim=32, local_rounds=4, imputation_interval=2,
-                    top_k_links=4, aug_max=12)
-    tr = make_spreadfgl(cfg, batch, num_servers=args.servers, edge_mesh=mesh)
+                    top_k_links=4, aug_max=12,
+                    gossip_every=max(args.gossip_every, 1))
+    if args.gossip_every > 0:
+        print(f"[edge-mesh] gossip aggregation: neighbor exchange every "
+              f"{args.gossip_every} round(s) over the mesh")
+        tr = make_spreadfgl_gossip(cfg, batch, num_servers=args.servers,
+                                   gossip_every=args.gossip_every,
+                                   edge_mesh=mesh)
+    else:
+        tr = make_spreadfgl(cfg, batch, num_servers=args.servers,
+                            edge_mesh=mesh)
 
     state = tr.init(jax.random.key(args.seed), batch)
     placement = {d.id for leaf in jax.tree.leaves(state.ae_params)

@@ -1,16 +1,25 @@
 """FGL training launcher (the paper's experiments from the command line).
 
-  PYTHONPATH=src python -m repro.launch.fgl_train --dataset cora --method \
-      SpreadFGL --clients 6 --rounds 12
+  PYTHONPATH=src python -m repro.launch.fgl_train \\
+      --dataset cora --method SpreadFGL --clients 6 --servers 3 --rounds 12 \\
+      [--local-rounds 4] [--imputation-interval 2] [--top-k 4] \\
+      [--label-ratio 0.3] [--scale 0.15] [--feature-noise 3.0] \\
+      [--signal-ratio 0.5] [--seed 0] [--impl reference] [--gossip-every 1] \\
+      [--edge-mesh] [--json-out hist.json] [--save-state s.npz] [--resume s.npz]
 
 Every method resolves through ``repro.core.registry`` — the same strategy
-compositions the benchmarks and examples use. ``--save-state`` checkpoints
-the final ``FGLState``; ``--resume`` restores one and continues Algorithm 1
-at the checkpointed round (true resume, imputation schedule intact).
-``--impl`` selects the hot-path kernels for BOTH the per-client classifier
-aggregation and the imputation round's fused similarity top-k: ``reference``
-(jnp), ``pallas`` (TPU), or ``pallas_interpret`` (Pallas kernels in
-interpret mode — bitwise the same code path as ``pallas``, runnable on CPU).
+compositions the benchmarks and examples use (see ``registry.names()`` /
+``docs/ARCHITECTURE.md``). ``--save-state`` checkpoints the final
+``FGLState``; ``--resume`` restores one and continues Algorithm 1 at the
+checkpointed round (true resume: imputation schedule AND gossip round-phase
+intact). ``--impl`` selects the hot-path kernels for BOTH the per-client
+classifier aggregation and the imputation round's fused similarity top-k:
+``reference`` (jnp), ``pallas`` (TPU), or ``pallas_interpret`` (Pallas
+kernels in interpret mode — bitwise the same code path as ``pallas``,
+runnable on CPU). ``--gossip-every K`` (method ``spreadfgl_gossip``) makes
+edge servers exchange parameters with topology neighbors only every K
+rounds instead of dense per-round Eq. 16 averaging; combine with
+``--edge-mesh`` to place the exchange on the device mesh.
 """
 from __future__ import annotations
 
@@ -45,6 +54,10 @@ def main() -> None:
                     choices=("reference", "pallas", "pallas_interpret"),
                     help="hot-path kernels for classifier aggregation and the "
                          "fused similarity top-k of the imputation round")
+    ap.add_argument("--gossip-every", type=int, default=1,
+                    help="cross-server exchange interval K for "
+                         "spreadfgl_gossip (1 == dense-equivalent; selecting "
+                         "a K forces the spreadfgl_gossip method)")
     ap.add_argument("--json-out", default="")
     ap.add_argument("--save-state", default="",
                     help="write the final FGLState to this .npz")
@@ -63,21 +76,35 @@ def main() -> None:
     print(f"[fgl] {args.dataset}: {graph.num_nodes} nodes, "
           f"{count_missing_links(graph, assign)} missing cross-client links")
 
+    if args.gossip_every < 1:
+        ap.error("--gossip-every must be >= 1 (1 == exchange every round)")
+    if args.gossip_every > 1:
+        # Picking an exchange interval means gossip aggregation; only the
+        # edge-server compositions have a cross-server exchange to schedule.
+        if args.method == "SpreadFGL":
+            args.method = "spreadfgl_gossip"
+        elif args.method != "spreadfgl_gossip":
+            ap.error(f"--gossip-every applies to SpreadFGL/spreadfgl_gossip, "
+                     f"not --method {args.method}")
     cfg = FGLConfig(hidden_dim=32, local_rounds=args.local_rounds,
                     imputation_interval=args.imputation_interval,
                     top_k_links=args.top_k, aug_max=12,
-                    label_ratio=args.label_ratio, kernel_impl=args.impl)
+                    label_ratio=args.label_ratio, kernel_impl=args.impl,
+                    gossip_every=args.gossip_every)
     if args.impl != "reference":
         print(f"[fgl] kernel impl: {args.impl} (fused sim_topk + "
               f"sage_aggregate Pallas kernels)")
     kw = {}
-    if args.method == "SpreadFGL":
+    if args.method in ("SpreadFGL", "spreadfgl_gossip"):
         kw["num_servers"] = args.servers
         if args.edge_mesh:
             from repro.launch.mesh import make_edge_mesh
             kw["edge_mesh"] = make_edge_mesh(args.servers)
             print(f"[fgl] edge mesh: {kw['edge_mesh'].size} device(s) for "
                   f"N={args.servers}")
+    if args.method == "spreadfgl_gossip":
+        print(f"[fgl] gossip aggregation: cross-server exchange every "
+              f"{args.gossip_every} round(s)")
     tr = registry.build(args.method, cfg, batch, **kw)
 
     if args.resume:

@@ -13,7 +13,12 @@ mesh and reports their collective traffic:
               applied every K steps (the paper's edge-layer aggregation).
 
 The per-step cross-pod byte ratio (gossip/K vs all-reduce) is the §Perf
-measurement for the paper-representative hillclimb pair.
+measurement for the paper-representative hillclimb pair. All byte/ratio
+math lives in ``repro.core.gossip`` — this CLI only lowers the two
+schedules and reports. The *FGL engine* equivalent (gossip as a first-class
+Aggregator strategy over the stacked [N] edge-server axis) is the
+``spreadfgl_gossip`` registry method; ``benchmarks/bench_load_balance.py``
+measures that path.
 
   PYTHONPATH=src python -m repro.launch.gossip_dryrun --arch qwen3-4b -K 8
 """
@@ -68,7 +73,9 @@ def main() -> None:
     ar = sum(out["allreduce"].values())
     sp = sum(out["spread"].values())
     k = args.gossip_every
-    ratio = (sp / k) / max(ar, 1)
+    # The byte-ratio math lives in core/gossip.py (shared with
+    # benchmarks/bench_load_balance.py); this CLI is a thin caller.
+    ratio = gossip.gossip_allreduce_ratio(ar, sp, every=k)
     print(f"[gossip-dryrun] per-step cross-pod bytes: allreduce={ar/1e9:.3f}GB "
           f"spread(K={k})={sp/k/1e9:.3f}GB ratio={ratio:.3f}")
     rec = {"arch": args.arch, "K": k, "allreduce_bytes": ar,
