@@ -29,13 +29,22 @@ ROUNDS = 12
 
 
 def fgl_setup(dataset: str, num_clients: int, *, seed: int = 1,
-              label_ratio: float = 0.3, aug_max: int = 12, scale: float = None):
+              label_ratio: float = 0.3, aug_max: int = 12, scale: float = None,
+              partitioner=None, participation: float = 1.0):
+    """Graph + partition + config for one benchmark cell.
+
+    ``partitioner`` (a ``repro.core.partition.Partitioner`` or registry
+    name) and ``participation`` open the heterogeneity axis; the defaults
+    reproduce the homogeneous every-client setup of the paper benches.
+    """
     g = make_sbm_graph(DATASETS[dataset], scale=scale or SCALE, seed=seed,
                        feature_noise=NOISE, signal_ratio=SIGNAL)
     batch, assign = partition_graph(g, num_clients, aug_max=aug_max,
-                                    seed=0, label_ratio=label_ratio)
+                                    seed=0, label_ratio=label_ratio,
+                                    partitioner=partitioner)
     cfg = FGLConfig(hidden_dim=32, local_rounds=4, imputation_interval=2,
-                    top_k_links=4, aug_max=aug_max, label_ratio=label_ratio)
+                    top_k_links=4, aug_max=aug_max, label_ratio=label_ratio,
+                    participation=participation)
     return g, batch, cfg
 
 

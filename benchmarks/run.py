@@ -12,14 +12,15 @@ import argparse
 import time
 
 from benchmarks import (bench_ablation, bench_accuracy, bench_convergence,
-                        bench_k_sensitivity, bench_kernels, bench_load_balance,
-                        bench_roofline)
+                        bench_heterogeneity, bench_k_sensitivity,
+                        bench_kernels, bench_load_balance, bench_roofline)
 
 BENCHES = {
     "table2_accuracy": bench_accuracy.main,
     "fig7_ablation": bench_ablation.main,
     "fig8_convergence": bench_convergence.main,
     "fig5_k_sensitivity": bench_k_sensitivity.main,
+    "heterogeneity": bench_heterogeneity.main,
     "load_balance": bench_load_balance.main,
     "kernels": bench_kernels.main,
     "roofline": bench_roofline.main,
@@ -43,6 +44,10 @@ def _headline(name: str, result) -> str:
                     f"aul_fedavg={auls.get('FedAvg-fusion', 0):.2f}")
         if name == "fig5_k_sensitivity":
             return ";".join(f"K{k}={v['acc']:.3f}" for k, v in result["K"].items())
+        if name == "heterogeneity":
+            s = result["summary"]
+            return (f"spread_acc={s['spread_acc']:.3f};"
+                    f"local_acc={s['local_acc']:.3f}")
         if name == "load_balance":
             return f"peak_load_reduction={result['peak_load_reduction']:.2f}x"
         if name == "kernels":

@@ -10,13 +10,19 @@ Sec. IV-A on the same partition. ``--impl`` selects the hot-path kernels
 (reference | pallas | pallas_interpret) for every method — the single
 ``FGLConfig.kernel_impl`` knob covers both classifier aggregation and the
 imputation round's fused similarity top-k.
+
+The heterogeneity axis rides along: ``--partitioner dirichlet --alpha 0.1``
+skews the client split non-IID and ``--participation 0.5`` lets only half
+the clients aggregate per round (see ``docs/BENCHMARKS.md``, heterogeneity
+section, for the full sweep).
 """
 import argparse
 
 import jax
 
 from repro.core import registry
-from repro.core.partition import partition_graph
+from repro.core.partition import (PARTITIONERS, label_skew_entropy,
+                                  make_partitioner, partition_graph)
 from repro.core.types import FGLConfig
 from repro.data.synthetic_graphs import DATASETS, make_sbm_graph
 from repro.launch.mesh import make_edge_mesh
@@ -28,13 +34,26 @@ def main():
                     choices=("reference", "pallas", "pallas_interpret"))
     ap.add_argument("--gossip-every", type=int, default=4,
                     help="cross-server exchange interval of the gossip row")
+    ap.add_argument("--partitioner", default="label_prop",
+                    choices=tuple(sorted(PARTITIONERS)),
+                    help="client-split strategy (heterogeneity axis)")
+    ap.add_argument("--alpha", type=float, default=1.0,
+                    help="Dirichlet concentration (--partitioner dirichlet)")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="per-round participating-client fraction rho")
     args = ap.parse_args()
 
     graph = make_sbm_graph(DATASETS["citeseer"], scale=0.15, seed=1,
                            feature_noise=3.0, signal_ratio=0.5)
-    batch, _ = partition_graph(graph, num_clients=6, aug_max=12, seed=0)
+    part = make_partitioner(args.partitioner, alpha=args.alpha)
+    batch, assign = partition_graph(graph, num_clients=6, aug_max=12, seed=0,
+                                    partitioner=part)
+    ent = label_skew_entropy(assign, graph.y, 6)
+    print(f"partitioner={args.partitioner} rho={args.participation} "
+          f"mean client label entropy={ent.mean():.3f} nats")
     cfg = FGLConfig(hidden_dim=32, local_rounds=4, imputation_interval=2,
-                    top_k_links=4, aug_max=12, kernel_impl=args.impl)
+                    top_k_links=4, aug_max=12, kernel_impl=args.impl,
+                    participation=args.participation)
 
     # The [N] server axis shards across whatever devices exist (size-1 mesh on
     # a single-device host — identical numbers, no sharding). Every method is

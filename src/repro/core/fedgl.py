@@ -95,13 +95,19 @@ class FGLTrainer:
                  aggregator: Optional[strategies.Aggregator] = None,
                  imputation: Optional[strategies.ImputationStrategy] = None,
                  kernel_impl: Optional[str] = None,
+                 participation: Optional[float] = None,
                  use_negative_sampling: bool = True, use_assessor: bool = True,
                  edge_mesh=None):
         if kernel_impl is not None:       # constructor override wins over cfg
             cfg = dataclasses.replace(cfg, kernel_impl=kernel_impl)
+        if participation is not None:     # same: ctor override wins over cfg
+            cfg = dataclasses.replace(cfg, participation=float(participation))
         if cfg.kernel_impl not in imputation_lib.KERNEL_IMPLS:
             raise ValueError(f"unknown kernel_impl {cfg.kernel_impl!r}; "
                              f"expected one of {imputation_lib.KERNEL_IMPLS}")
+        if not 0.0 < cfg.participation <= 1.0:
+            raise ValueError(f"participation must be in (0, 1], "
+                             f"got {cfg.participation}")
         self.m = batch.num_clients
         self.topology = topology if topology is not None else strategies.StarTopology()
         layout = self.topology.build(self.m)
@@ -126,6 +132,15 @@ class FGLTrainer:
         self.n_local = batch.n_local_max
         self.use_ns = use_negative_sampling
         self.use_assessor = use_assessor
+        self.participation = float(cfg.participation)
+        # Partial participation draws from its OWN key stream, derived from
+        # cfg.seed and folded with the absolute round index: enabling ρ < 1
+        # never perturbs the training key threaded through FGLState (ρ = 1
+        # histories stay bit-identical), and the round-t mask is a pure
+        # function of (seed, t) — a checkpoint restored mid-run reproduces
+        # the participation schedule exactly, like the imputation and gossip
+        # schedules.
+        self._part_key = jax.random.fold_in(jax.random.key(cfg.seed), 0x9A57)
         self.opt = Adam(lr=cfg.lr_classifier)
         self.gen_opt = Adam(lr=cfg.lr_generator)
         self.edge_mesh = edge_mesh
@@ -216,14 +231,30 @@ class FGLTrainer:
         p = self._agg_period
         return p - 1 if (t + 1) % p == 0 else 0
 
-    def aggregate(self, params: PyTree, *, round: int = 0) -> PyTree:
+    def _participation_mask(self, t: int):
+        """[M] 0/1 participation mask of round ``t``, or None at ρ = 1.
+
+        None (full participation) routes the aggregators onto their exact
+        unmasked code paths, so ρ = 1 reproduces pre-participation fixed-seed
+        goldens bit-identically. At ρ < 1 the mask has a static [M] shape
+        every round (exactly ceil(ρ·M) participants, never a gather/resize),
+        so the jitted aggregation compiles exactly one masked variant.
+        """
+        if self.participation >= 1.0:
+            return None
+        key = jax.random.fold_in(self._part_key, t)
+        return strategies.participation_mask(key, self.m, self.participation)
+
+    def aggregate(self, params: PyTree, *, round: int = 0, mask=None) -> PyTree:
         """Apply this trainer's Aggregator to stacked client classifiers.
 
         ``round`` matters only for round-scheduled aggregators (gossip every
         K); it is canonicalized to the exchange/skip phase before the jitted
-        call.
+        call. ``mask`` is an optional [M] participation mask (``step()``
+        passes the round's sampled mask when ``cfg.participation < 1``).
         """
-        return self._agg_fn(params, round=self._agg_phase(int(round)))
+        return self._agg_fn(params, round=self._agg_phase(int(round)),
+                            mask=mask)
 
     # -- imputation helpers shared by the strategies --------------------------
 
@@ -368,10 +399,11 @@ class FGLTrainer:
             state.params, state.opt_state, state.batch)
         if self.imputation.active and (t % self.cfg.imputation_interval == 0):
             state = self._impute_fn(state)
-        # The gossip phase is a pure function of the absolute round, so a
-        # state restored mid-interval resumes the exchange schedule exactly
-        # where the checkpoint left it.
-        state.params = self._agg_fn(state.params, round=self._agg_phase(t))
+        # The gossip phase and the participation mask are pure functions of
+        # the absolute round, so a state restored mid-interval resumes both
+        # schedules exactly where the checkpoint left them.
+        state.params = self._agg_fn(state.params, round=self._agg_phase(t),
+                                    mask=self._participation_mask(t))
         loss, acc, f1 = self._eval_fn(state.params, state.batch)
         state.round = t + 1
         return state, {"round": t, "loss": loss, "acc": acc, "f1": f1}

@@ -26,7 +26,7 @@ jax state — per-round state threads through ``FGLState``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Protocol, runtime_checkable
+from typing import Any, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -74,7 +74,14 @@ class StarTopology:
 
 @dataclasses.dataclass(frozen=True)
 class RingTopology:
-    """N edge servers on a ring (SpreadFGL's testbed, Sec. III-E)."""
+    """N edge servers on a ring (SpreadFGL's testbed, Sec. III-E).
+
+    Ring structure has ONE source: the adjacency comes verbatim from
+    :func:`repro.core.partition.ring_adjacency`; the collective_permute
+    schedule in :func:`repro.core.gossip.block_ring_gossip` realizes the
+    same matrix implicitly (consistency pinned in
+    ``tests/test_gossip.py::TestRingSingleSource``).
+    """
 
     num_servers: int = 3
 
@@ -109,6 +116,39 @@ class CustomTopology:
 # Aggregator: combine client classifiers once per global round.
 # ---------------------------------------------------------------------------
 
+def participation_mask(key: jax.Array, num_clients: int, rho: float) -> jnp.ndarray:
+    """Sample one round's participating-client mask: [M] float32 0/1.
+
+    Exactly ``ceil(rho * M)`` clients participate, sampled without
+    replacement (the classic FedAvg "select a fraction C of clients"
+    scheme) — so at least one client always participates and the mask shape
+    is static regardless of rho: jit compiles exactly one masked variant,
+    never a gather/resize per round.
+    """
+    if not 0.0 < rho <= 1.0:
+        raise ValueError(f"participation must be in (0, 1], got {rho}")
+    k = min(num_clients, max(1, int(np.ceil(rho * num_clients - 1e-9))))
+    perm = jax.random.permutation(key, num_clients)
+    return jnp.zeros((num_clients,), jnp.float32).at[perm[:k]].set(1.0)
+
+
+def _masked_server_mean(leaf: jnp.ndarray, mask_g: jnp.ndarray,
+                        num_servers: int, m_per: int) -> jnp.ndarray:
+    """Participation-weighted per-server mean over a grouped leaf.
+
+    ``mask_g`` is the [N, m_per] participation mask. A server whose covered
+    clients ALL sit out this round falls back to the plain unweighted mean —
+    the edge server re-broadcasts the weights it already holds rather than
+    dividing by zero.
+    """
+    grouped = leaf.reshape((num_servers, m_per) + leaf.shape[1:])
+    shaped = mask_g.reshape((num_servers, m_per) + (1,) * (leaf.ndim - 1))
+    num = jnp.sum(grouped * shaped, axis=1)
+    den = jnp.sum(mask_g, axis=1).reshape((num_servers,) + (1,) * (leaf.ndim - 1))
+    plain = jnp.sum(grouped, axis=1) / m_per
+    return jnp.where(den > 0, num / jnp.maximum(den, 1.0), plain)
+
+
 @runtime_checkable
 class Aggregator(Protocol):
     """Combine stacked [M] client classifiers once per global round.
@@ -118,17 +158,30 @@ class Aggregator(Protocol):
     rounds, ``0`` otherwise) — a static Python int, so round-scheduled
     aggregators compile exactly two variants, not one per round. Aggregators
     without a schedule (``period`` 1) ignore it.
+
+    ``mask`` is the optional [M] participation mask of the round
+    (:func:`participation_mask`); every mean becomes mask-weighted so
+    non-participating clients contribute nothing. ``mask=None`` means full
+    participation and MUST take the exact unmasked code path — the engine
+    passes None whenever ``cfg.participation == 1`` so fixed-seed goldens
+    stay bit-identical.
     """
 
     def aggregate(self, params: PyTree, *, adj: jnp.ndarray,
-                  num_servers: int, m_per: int, round: int = 0) -> PyTree: ...
+                  num_servers: int, m_per: int, round: int = 0,
+                  mask: Optional[jnp.ndarray] = None) -> PyTree: ...
 
 
 @dataclasses.dataclass(frozen=True)
 class IdentityAggregator:
-    """No aggregation: clients keep their own weights (LocalFGL, Sec. IV-A)."""
+    """No aggregation: clients keep their own weights (LocalFGL, Sec. IV-A).
 
-    def aggregate(self, params, *, adj, num_servers, m_per, round=0):
+    ``mask`` is accepted and ignored: with no cross-client mixing there is
+    nothing for partial participation to gate — a non-participating client
+    keeping its own weights is exactly what identity already does.
+    """
+
+    def aggregate(self, params, *, adj, num_servers, m_per, round=0, mask=None):
         return params
 
 
@@ -136,13 +189,22 @@ class IdentityAggregator:
 class FedAvgAggregator:
     """Per-server FedAvg (McMahan et al.): mean over covered clients,
     broadcast back — classic FGL's single aggregation point when N = 1
-    (FedGL, Sec. III-B)."""
+    (FedGL, Sec. III-B). With a participation ``mask`` the mean runs over
+    the round's participating clients only (all-out servers re-broadcast
+    their plain mean, see :func:`_masked_server_mean`)."""
 
-    def aggregate(self, params, *, adj, num_servers, m_per, round=0):
-        def agg(leaf):
-            grouped = leaf.reshape((num_servers, m_per) + leaf.shape[1:])
-            w = jnp.sum(grouped, axis=1) / m_per
-            return jnp.repeat(w, m_per, axis=0)
+    def aggregate(self, params, *, adj, num_servers, m_per, round=0, mask=None):
+        if mask is None:
+            def agg(leaf):
+                grouped = leaf.reshape((num_servers, m_per) + leaf.shape[1:])
+                w = jnp.sum(grouped, axis=1) / m_per
+                return jnp.repeat(w, m_per, axis=0)
+        else:
+            mask_g = mask.reshape(num_servers, m_per)
+
+            def agg(leaf):
+                w = _masked_server_mean(leaf, mask_g, num_servers, m_per)
+                return jnp.repeat(w, m_per, axis=0)
         return jax.tree.map(agg, params)
 
 
@@ -157,16 +219,38 @@ class NeighborAggregator:
     cross-server traffic over K rounds; with ``every_k=1`` on the same
     adjacency the two are numerically interchangeable
     (``tests/test_gossip.py`` pins the allclose).
+
+    With a participation ``mask``, Eq. 16's client count M_r becomes the
+    round's participating count m̃_r (mask-weighted sums in both numerator
+    and denominator); a neighborhood that entirely sat out falls back to the
+    plain Eq. 16 mix.
     """
 
-    def aggregate(self, params, *, adj, num_servers, m_per, round=0):
-        def agg(leaf):
-            grouped = leaf.reshape((num_servers, m_per) + leaf.shape[1:])
-            client_sum = jnp.sum(grouped, axis=1)              # [N, ...]
-            num = jnp.einsum("rj,r...->j...", adj, client_sum)
-            den = jnp.sum(adj, axis=0) * m_per                 # [N]
-            w = num / den.reshape((num_servers,) + (1,) * (leaf.ndim - 1))
-            return jnp.repeat(w, m_per, axis=0)
+    def aggregate(self, params, *, adj, num_servers, m_per, round=0, mask=None):
+        if mask is None:
+            def agg(leaf):
+                grouped = leaf.reshape((num_servers, m_per) + leaf.shape[1:])
+                client_sum = jnp.sum(grouped, axis=1)              # [N, ...]
+                num = jnp.einsum("rj,r...->j...", adj, client_sum)
+                den = jnp.sum(adj, axis=0) * m_per                 # [N]
+                w = num / den.reshape((num_servers,) + (1,) * (leaf.ndim - 1))
+                return jnp.repeat(w, m_per, axis=0)
+        else:
+            mask_g = mask.reshape(num_servers, m_per)
+            counts = jnp.sum(mask_g, axis=1)                       # m̃_r [N]
+
+            def agg(leaf):
+                grouped = leaf.reshape((num_servers, m_per) + leaf.shape[1:])
+                shaped = mask_g.reshape((num_servers, m_per) + (1,) * (leaf.ndim - 1))
+                tail = (1,) * (leaf.ndim - 1)
+                num = jnp.einsum("rj,r...->j...", adj,
+                                 jnp.sum(grouped * shaped, axis=1))
+                den = jnp.einsum("r,rj->j", counts, adj).reshape((num_servers,) + tail)
+                plain_num = jnp.einsum("rj,r...->j...", adj, jnp.sum(grouped, axis=1))
+                plain_den = (jnp.sum(adj, axis=0) * m_per).reshape((num_servers,) + tail)
+                w = jnp.where(den > 0, num / jnp.maximum(den, 1.0),
+                              plain_num / plain_den)
+                return jnp.repeat(w, m_per, axis=0)
         return jax.tree.map(agg, params)
 
 
@@ -220,10 +304,20 @@ class GossipAggregator:
         """Exchange schedule length; the engine passes ``round`` mod this."""
         return self.every_k
 
-    def aggregate(self, params, *, adj, num_servers, m_per, round=0):
-        def server_mean(leaf):
-            grouped = leaf.reshape((num_servers, m_per) + leaf.shape[1:])
-            return jnp.sum(grouped, axis=1) / m_per
+    def aggregate(self, params, *, adj, num_servers, m_per, round=0, mask=None):
+        if mask is None:
+            def server_mean(leaf):
+                grouped = leaf.reshape((num_servers, m_per) + leaf.shape[1:])
+                return jnp.sum(grouped, axis=1) / m_per
+        else:
+            # Participation gates the edge-client leg only: the per-server
+            # mean runs over participating clients (all-out servers keep
+            # their plain mean); the cross-server exchange is unchanged —
+            # servers always gossip whatever they aggregated this round.
+            mask_g = mask.reshape(num_servers, m_per)
+
+            def server_mean(leaf):
+                return _masked_server_mean(leaf, mask_g, num_servers, m_per)
 
         w = jax.tree.map(server_mean, params)                  # [N, ...]
         if num_servers > 1 and (round + 1) % self.every_k == 0:

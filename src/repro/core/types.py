@@ -124,6 +124,15 @@ class FGLConfig:
     # Eq. 16 averaging. 1 == exchange every round (== NeighborAggregator on
     # the same adjacency). Only consumed by `spreadfgl_gossip` compositions.
     gossip_every: int = 1
+    # Per-round partial client participation ρ ∈ (0, 1]: each global round
+    # exactly ceil(ρ·M) clients (sampled without replacement from a key
+    # stream independent of the training key) contribute to aggregation —
+    # every Aggregator becomes a participation-mask-weighted mean. ρ = 1
+    # disables the feature entirely (no mask is sampled, no key is consumed;
+    # fixed-seed histories are bit-identical to pre-participation runs).
+    # The round-t mask is a pure function of (seed, t), so save/resume
+    # reproduces the schedule exactly. CLI: `fgl_train --participation`.
+    participation: float = 1.0
     ae_iters: int = 5                  # T_ae
     assessor_iters: int = 3           # T_as
     ae_outer_iters: int = 3            # "while not convergent" outer loop bound

@@ -3,6 +3,7 @@
   PYTHONPATH=src python -m repro.launch.fgl_train \\
       --dataset cora --method SpreadFGL --clients 6 --servers 3 --rounds 12 \\
       [--local-rounds 4] [--imputation-interval 2] [--top-k 4] \\
+      [--partitioner label_prop] [--alpha 1.0] [--participation 1.0] \\
       [--label-ratio 0.3] [--scale 0.15] [--feature-noise 3.0] \\
       [--signal-ratio 0.5] [--seed 0] [--impl reference] [--gossip-every 1] \\
       [--edge-mesh] [--json-out hist.json] [--save-state s.npz] [--resume s.npz]
@@ -20,17 +21,26 @@ runnable on CPU). ``--gossip-every K`` (method ``spreadfgl_gossip``) makes
 edge servers exchange parameters with topology neighbors only every K
 rounds instead of dense per-round Eq. 16 averaging; combine with
 ``--edge-mesh`` to place the exchange on the device mesh.
+
+Heterogeneity axis (``docs/BENCHMARKS.md``): ``--partitioner`` picks the
+client-split strategy (``label_prop`` default, ``dirichlet`` label-skew
+non-IID with concentration ``--alpha``, ``degree`` degree-skew, ``random``
+edge-cut baseline); ``--participation R`` makes only ceil(R·M) clients
+contribute to each round's aggregation (partial participation, R in (0,1]).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
 
 import jax
 
 from repro.checkpoint import io as ckpt_io
 from repro.core import registry
-from repro.core.partition import count_missing_links, partition_graph
+from repro.core.partition import (PARTITIONERS, count_missing_links,
+                                  label_skew_entropy, make_partitioner,
+                                  partition_graph)
 from repro.core.types import FGLConfig
 from repro.data.synthetic_graphs import DATASETS, make_sbm_graph
 
@@ -45,6 +55,19 @@ def main() -> None:
     ap.add_argument("--local-rounds", type=int, default=4)
     ap.add_argument("--imputation-interval", "-K", type=int, default=2)
     ap.add_argument("--top-k", type=int, default=4)
+    ap.add_argument("--partitioner", default="label_prop",
+                    choices=tuple(sorted(PARTITIONERS)),
+                    help="client-split strategy (heterogeneity axis): "
+                         "label_prop (paper default), dirichlet (label-skew "
+                         "non-IID, see --alpha), degree (degree-skew), "
+                         "random (edge-cut baseline)")
+    ap.add_argument("--alpha", type=float, default=1.0,
+                    help="Dirichlet concentration for --partitioner "
+                         "dirichlet (small = more label skew)")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="fraction of clients participating in each round's "
+                         "aggregation (rho in (0,1]; 1.0 = everyone, "
+                         "bit-identical to runs without the flag)")
     ap.add_argument("--label-ratio", type=float, default=0.3)
     ap.add_argument("--scale", type=float, default=0.15)
     ap.add_argument("--feature-noise", type=float, default=3.0)
@@ -71,10 +94,21 @@ def main() -> None:
     graph = make_sbm_graph(DATASETS[args.dataset], scale=args.scale,
                            seed=args.seed + 1, feature_noise=args.feature_noise,
                            signal_ratio=args.signal_ratio)
+    part = make_partitioner(args.partitioner, alpha=args.alpha)
     batch, assign = partition_graph(graph, args.clients, aug_max=12,
-                                    seed=args.seed, label_ratio=args.label_ratio)
+                                    seed=args.seed, label_ratio=args.label_ratio,
+                                    partitioner=part)
+    ent = label_skew_entropy(assign, graph.y, args.clients)
     print(f"[fgl] {args.dataset}: {graph.num_nodes} nodes, "
           f"{count_missing_links(graph, assign)} missing cross-client links")
+    print(f"[fgl] partitioner={args.partitioner} "
+          f"mean client label entropy={ent.mean():.3f} nats")
+    if not 0.0 < args.participation <= 1.0:
+        ap.error("--participation must be in (0, 1]")
+    if args.participation < 1.0:
+        n_part = max(1, math.ceil(args.participation * args.clients))
+        print(f"[fgl] partial participation: rho={args.participation} "
+              f"({n_part} of {args.clients} clients aggregate per round)")
 
     if args.gossip_every < 1:
         ap.error("--gossip-every must be >= 1 (1 == exchange every round)")
@@ -90,7 +124,8 @@ def main() -> None:
                     imputation_interval=args.imputation_interval,
                     top_k_links=args.top_k, aug_max=12,
                     label_ratio=args.label_ratio, kernel_impl=args.impl,
-                    gossip_every=args.gossip_every)
+                    gossip_every=args.gossip_every,
+                    participation=args.participation, seed=args.seed)
     if args.impl != "reference":
         print(f"[fgl] kernel impl: {args.impl} (fused sim_topk + "
               f"sage_aggregate Pallas kernels)")

@@ -1,7 +1,10 @@
-"""docs/ stays truthful: every path referenced from PAPER_MAP.md and
-ARCHITECTURE.md exists, `file:line` anchors point inside their file, and
-every symbol a PAPER_MAP table row names still appears in the file(s) that
-row references. This is the CI docs job (see .github/workflows/ci.yml)."""
+"""docs/ stays truthful: every path referenced from PAPER_MAP.md,
+ARCHITECTURE.md, and BENCHMARKS.md exists, `file:line` anchors point inside
+their file, every symbol a PAPER_MAP table row names still appears in the
+file(s) that row references, and BENCHMARKS.md stays in lockstep with the
+benchmark suite (every bench module documented; every result file and flag
+it mentions actually produced/accepted by the code). This is the CI docs
+job (see .github/workflows/ci.yml)."""
 import pathlib
 import re
 
@@ -30,7 +33,8 @@ def _references(text: str):
             for m in PATH_RE.finditer(text)]
 
 
-@pytest.mark.parametrize("doc", ["PAPER_MAP.md", "ARCHITECTURE.md"])
+@pytest.mark.parametrize("doc", ["PAPER_MAP.md", "ARCHITECTURE.md",
+                                 "BENCHMARKS.md"])
 def test_referenced_paths_exist(doc):
     refs = _references(_doc(doc))
     assert refs, f"{doc} references no paths — anchor extraction broken?"
@@ -73,6 +77,73 @@ def test_table_symbols_exist_in_referenced_files():
                 if not any(needle in t for t in texts):
                     bad.append(f"{sym} not found in {paths}")
     assert not bad, f"stale symbols in PAPER_MAP.md: {bad}"
+
+
+# --- BENCHMARKS.md <-> benchmark suite lockstep ----------------------------
+
+FLAG_RE = re.compile(r"--[a-z][a-z-]+")
+RESULT_RE = re.compile(r"`(?:benchmarks/results/)?([\w-]+\.(?:json|md))`")
+
+
+def _benchmark_sections():
+    """(heading, body) per '## ' section of BENCHMARKS.md."""
+    parts = re.split(r"^## ", _doc("BENCHMARKS.md"), flags=re.MULTILINE)
+    return [(p.splitlines()[0], p) for p in parts]
+
+
+def test_benchmarks_doc_covers_every_module():
+    """Every benchmarks/bench_*.py module is referenced (one section each —
+    a new bench lands with its documentation)."""
+    text = _doc("BENCHMARKS.md")
+    modules = sorted(p.name for p in (ROOT / "benchmarks").glob("bench_*.py"))
+    assert modules, "no bench modules found — glob broken?"
+    missing = [m for m in modules if f"benchmarks/{m}" not in text]
+    assert not missing, f"BENCHMARKS.md does not document: {missing}"
+
+
+def test_benchmarks_doc_runner_names_exist():
+    """Every `--only` name in the doc's table is a key the orchestrator
+    accepts (BENCHES in benchmarks/run.py)."""
+    run_src = (ROOT / "benchmarks" / "run.py").read_text()
+    benches = set(re.findall(r'^\s+"([\w-]+)":', run_src, flags=re.MULTILINE))
+    table_names = re.findall(r"^\| `([\w-]+)` \|", _doc("BENCHMARKS.md"),
+                             flags=re.MULTILINE)
+    assert table_names, "BENCHMARKS.md lost its runner-name table"
+    unknown = [n for n in table_names if n not in benches]
+    assert not unknown, f"BENCHMARKS.md names unknown benchmarks: {unknown}"
+    undocumented = [b for b in benches if b not in table_names]
+    assert not undocumented, f"benchmarks missing from the table: {undocumented}"
+
+
+def test_benchmarks_doc_result_files_match_writers():
+    """Each section's result-file names must be produced by the module(s)
+    that section references (the write_result name / literal filename
+    appears in the module source) — stale filenames rot silently otherwise."""
+    bad = []
+    for heading, body in _benchmark_sections():
+        mods = [p for p, _ in _references(body)
+                if p.startswith("benchmarks/") and p.endswith(".py")]
+        if not mods:
+            continue
+        sources = "\n".join((ROOT / p).read_text() for p in mods
+                            if (ROOT / p).exists())
+        for fname in RESULT_RE.findall(body):
+            stem = fname.rsplit(".", 1)[0]
+            if stem not in sources:
+                bad.append(f"{fname} (section {heading!r}) not written by {mods}")
+    assert not bad, f"BENCHMARKS.md references result files nobody writes: {bad}"
+
+
+def test_benchmarks_doc_flags_exist_in_code():
+    """Every --flag the doc mentions is a real argparse option somewhere in
+    the benchmark orchestrator or the launch CLIs."""
+    accepted = "\n".join(
+        p.read_text() for p in
+        list((ROOT / "benchmarks").glob("*.py"))
+        + list((ROOT / "src/repro/launch").glob("*.py")))
+    missing = [f for f in set(FLAG_RE.findall(_doc("BENCHMARKS.md")))
+               if f'"{f}"' not in accepted]
+    assert not missing, f"BENCHMARKS.md mentions unknown flags: {missing}"
 
 
 def test_required_paper_coverage():

@@ -130,6 +130,29 @@ class TestAggregatorParity:
             S.GossipAggregator(every_k=0)
 
 
+class TestRingSingleSource:
+    """Ring structure has one source: ``partition.ring_adjacency``.
+
+    ``strategies.RingTopology`` consumes that matrix directly; the implicit
+    left/right collective_permute schedule of ``gossip.block_ring_gossip``
+    must realize the SAME adjacency — this cross-consistency check is what
+    lets the repo keep a matrix-free ring kernel without a second ring
+    definition drifting from the first (see both docstrings).
+    """
+
+    @pytest.mark.parametrize("n", [3, 5, 8])
+    def test_block_ring_gossip_equals_ring_adjacency_mix(self, n):
+        w = {"w": jax.random.normal(jax.random.key(2), (n, 4, 3))}
+        via_permute = gossip.block_ring_gossip(w)
+        via_matrix = gossip.adjacency_gossip(w, jnp.asarray(ring_adjacency(n)))
+        np.testing.assert_allclose(np.asarray(via_permute["w"]),
+                                   np.asarray(via_matrix["w"]), rtol=1e-6)
+
+    def test_ring_topology_layout_uses_ring_adjacency(self):
+        lay = S.RingTopology(num_servers=4).build(8)
+        np.testing.assert_array_equal(lay.adjacency, ring_adjacency(4))
+
+
 class TestEngineParity:
     def test_k1_history_matches_dense_spreadfgl(self, small):
         """Full training: spreadfgl_gossip(K=1) == SpreadFGL round for round."""

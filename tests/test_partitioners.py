@@ -1,0 +1,150 @@
+"""Property tests for the pluggable partitioning subsystem.
+
+Every Partitioner strategy must honor the same ``assign`` contract —
+every node on exactly one client, no empty client, deterministic per seed —
+and the Dirichlet strategy's label skew must be monotone in alpha
+(measured as per-client label entropy). The default strategy must stay
+bit-compatible with the pre-protocol ``partition_graph`` (the absolute pin
+is the fixed-seed goldens in ``tests/test_strategy_api.py``; here we pin
+``partitioner=None`` == ``"label_prop"``).
+"""
+import numpy as np
+import pytest
+
+from repro.core import partition as P
+from repro.data.synthetic_graphs import DATASETS, make_sbm_graph
+
+ALL_PARTITIONERS = sorted(P.PARTITIONERS)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return make_sbm_graph(DATASETS["cora"], scale=0.10, seed=1,
+                          feature_noise=3.0, signal_ratio=0.5)
+
+
+class TestAssignContract:
+    """The invariants every strategy promises, across strategies and seeds."""
+
+    @pytest.mark.parametrize("name", ALL_PARTITIONERS)
+    @pytest.mark.parametrize("num_clients", [3, 5])
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_every_node_assigned_exactly_once(self, graph, name, num_clients,
+                                              seed):
+        assign = P.make_partitioner(name).assign(graph, num_clients, seed=seed)
+        assert assign.shape == (graph.num_nodes,)
+        assert assign.dtype == np.int32
+        assert assign.min() >= 0 and assign.max() < num_clients
+        # non-empty clients: the engine's reshape requires every client real
+        assert len(np.unique(assign)) == num_clients
+
+    @pytest.mark.parametrize("name", ALL_PARTITIONERS)
+    def test_deterministic_per_seed(self, graph, name):
+        part = P.make_partitioner(name, alpha=0.5)
+        a = part.assign(graph, 4, seed=7)
+        b = part.assign(graph, 4, seed=7)
+        np.testing.assert_array_equal(a, b)
+
+    @pytest.mark.parametrize("name", ["dirichlet", "random"])
+    def test_seed_actually_varies_random_strategies(self, graph, name):
+        part = P.make_partitioner(name)
+        a = part.assign(graph, 4, seed=0)
+        b = part.assign(graph, 4, seed=1)
+        assert np.any(a != b)
+
+    @pytest.mark.parametrize("name", ALL_PARTITIONERS)
+    def test_partition_graph_batch_covers_graph(self, graph, name):
+        """The dispatcher materializes every strategy's assign identically:
+        the padded batch holds each global node exactly once, and only
+        intra-client edges survive."""
+        batch, assign = P.partition_graph(graph, 4, aug_max=8, seed=0,
+                                          partitioner=name)
+        ids = np.asarray(batch.global_id)
+        real = ids[ids >= 0]
+        assert len(real) == graph.num_nodes
+        assert len(np.unique(real)) == graph.num_nodes
+        for ci in range(batch.num_clients):
+            rows, cols = np.nonzero(np.asarray(batch.adj[ci]))
+            mask = np.asarray(batch.node_mask[ci])
+            assert mask[rows].all() and mask[cols].all()
+
+
+class TestDirichletSkew:
+    def test_entropy_monotone_in_alpha(self, graph):
+        """Per-client label entropy orders with the concentration: near-IID
+        (alpha=100) >= moderate (1) >= extreme skew (0.1), averaged over
+        seeds so one lucky draw can't flip the ordering."""
+        def mean_ent(alpha):
+            ents = []
+            for seed in (0, 1, 2):
+                a = P.DirichletPartitioner(alpha=alpha).assign(graph, 5,
+                                                               seed=seed)
+                ents.append(P.label_skew_entropy(a, graph.y, 5).mean())
+            return float(np.mean(ents))
+
+        e100, e1, e01 = mean_ent(100.0), mean_ent(1.0), mean_ent(0.1)
+        assert e100 > e1 > e01, (e100, e1, e01)
+
+    def test_rejects_nonpositive_alpha(self, graph):
+        with pytest.raises(ValueError, match="alpha"):
+            P.DirichletPartitioner(alpha=0.0).assign(graph, 4)
+
+
+class TestDegreeSkew:
+    def test_client_degree_profiles_ordered(self, graph):
+        """Client 0 owns the sparsest slice, client M-1 the hubs."""
+        assign = P.DegreeSkewPartitioner().assign(graph, 4, seed=0)
+        deg = np.zeros(graph.num_nodes)
+        np.add.at(deg, np.asarray(graph.senders), 1.0)
+        np.add.at(deg, np.asarray(graph.receivers), 1.0)
+        means = [deg[assign == ci].mean() for ci in range(4)]
+        assert means == sorted(means)
+        sizes = np.bincount(assign, minlength=4)
+        assert sizes.max() - sizes.min() <= 1  # near-equal split
+
+
+class TestRandomEdgeCut:
+    def test_cuts_most_edges(self, graph):
+        """Random assignment is the worst case: it must cut more links than
+        the community-aware default on the same graph."""
+        a_rand = P.RandomEdgeCutPartitioner().assign(graph, 4, seed=0)
+        a_comm = P.LabelPropagationPartitioner().assign(graph, 4, seed=0)
+        assert (P.count_missing_links(graph, a_rand)
+                > P.count_missing_links(graph, a_comm))
+
+
+class TestDispatcher:
+    def test_default_is_label_prop_bitwise(self, graph):
+        """partitioner=None, the "label_prop" name, and an explicit instance
+        all produce the identical batch (the fixed-seed goldens of
+        tests/test_strategy_api.py pin this behavior to the pre-protocol
+        partition_graph)."""
+        b0, a0 = P.partition_graph(graph, 4, aug_max=8, seed=0)
+        b1, a1 = P.partition_graph(graph, 4, aug_max=8, seed=0,
+                                   partitioner="label_prop")
+        b2, a2 = P.partition_graph(graph, 4, aug_max=8, seed=0,
+                                   partitioner=P.LabelPropagationPartitioner())
+        np.testing.assert_array_equal(a0, a1)
+        np.testing.assert_array_equal(a0, a2)
+        for k in ("x", "adj", "y", "node_mask", "train_mask", "test_mask",
+                  "global_id"):
+            np.testing.assert_array_equal(np.asarray(getattr(b0, k)),
+                                          np.asarray(getattr(b1, k)), err_msg=k)
+            np.testing.assert_array_equal(np.asarray(getattr(b0, k)),
+                                          np.asarray(getattr(b2, k)), err_msg=k)
+
+    def test_make_partitioner_unknown_name(self):
+        with pytest.raises(KeyError, match="label_prop"):
+            P.make_partitioner("louvain")
+
+    def test_make_partitioner_drops_foreign_kwargs(self):
+        """Callers may pass alpha unconditionally; non-Dirichlet strategies
+        simply ignore it."""
+        part = P.make_partitioner("degree", alpha=0.5)
+        assert isinstance(part, P.DegreeSkewPartitioner)
+        part = P.make_partitioner("dirichlet", alpha=0.5)
+        assert part.alpha == 0.5
+
+    def test_all_strategies_satisfy_protocol(self):
+        for name in ALL_PARTITIONERS:
+            assert isinstance(P.make_partitioner(name), P.Partitioner)
