@@ -13,7 +13,8 @@ import time
 
 from benchmarks import (bench_ablation, bench_accuracy, bench_convergence,
                         bench_heterogeneity, bench_k_sensitivity,
-                        bench_kernels, bench_load_balance, bench_roofline)
+                        bench_kernels, bench_load_balance, bench_roofline,
+                        bench_sim_scaling)
 
 BENCHES = {
     "table2_accuracy": bench_accuracy.main,
@@ -24,6 +25,7 @@ BENCHES = {
     "load_balance": bench_load_balance.main,
     "kernels": bench_kernels.main,
     "roofline": bench_roofline.main,
+    "sim_scaling": bench_sim_scaling.main,
 }
 
 
@@ -55,6 +57,10 @@ def _headline(name: str, result) -> str:
         if name == "roofline":
             return (f"ok={result.get('ok', 0)};skipped={result.get('skipped', 0)};"
                     f"failed={result.get('failed', 0)}")
+        if name == "sim_scaling":
+            top = max(result["rows"], key=lambda r: r["n"])
+            return (f"n_max={top['n']};"
+                    f"gflops={top['achieved_flops_per_s']/1e9:.1f}")
     except Exception as e:  # noqa: BLE001
         return f"headline_error={e!r}"
     return ""

@@ -323,12 +323,29 @@ class FGLTrainer:
                                                 length=cfg.assessor_iters)
         return ae, ae_opt, asr, as_opt, s_noise
 
-    def _server_round(self, key_j, ae, aeo, asr, aso, emb_j, mask_j, client_ids):
-        """One edge server's imputation work on its [M_per, n_pad, c] slice."""
-        cfg = self.cfg
+    def _server_round_gen(self, key_j, ae, aeo, asr, aso, emb_j, mask_j):
+        """The generator half of one server's imputation round.
+
+        Fusion + adversarial AE/assessor training + X̅ = f(S); everything
+        EXCEPT the similarity top-k, so the candidate-sharded path
+        (``SpreadImputation.sim_mesh``) can vmap this part over the [N]
+        server axis and run ONE batched ring top-k outside the vmap —
+        shard_map-over-vmap is the fragile composition, vmap-then-shard_map
+        is not. Returns the fused (h_flat, flat_mask) along with the trained
+        state so the caller computes ``target_mask`` and similarity from the
+        exact same fused embeddings.
+        """
         h_flat, flat_mask = imputation.fuse_embeddings(emb_j, mask_j)
         ae, aeo, asr, aso, s_noise = self._train_generator(
             key_j, ae, aeo, asr, aso, h_flat, flat_mask)
+        x_bar = imputation.encode(ae, s_noise)              # X̅ = f(S), same S
+        return ae, aeo, asr, aso, x_bar, h_flat, flat_mask
+
+    def _server_round(self, key_j, ae, aeo, asr, aso, emb_j, mask_j, client_ids):
+        """One edge server's imputation work on its [M_per, n_pad, c] slice."""
+        cfg = self.cfg
+        ae, aeo, asr, aso, x_bar, h_flat, flat_mask = self._server_round_gen(
+            key_j, ae, aeo, asr, aso, emb_j, mask_j)
         # Link targets must be REAL local nodes: after the first fixing round
         # the patcher sets node_mask=1 on aug slots, and without this
         # restriction later rounds could link to synthetic nodes.
@@ -337,7 +354,6 @@ class FGLTrainer:
         scores, idx = imputation.similarity_topk(
             h_flat, flat_mask, client_ids, cfg.top_k_links,
             kernel_impl=self.kernel_impl, target_mask=target_mask)
-        x_bar = imputation.encode(ae, s_noise)              # X̅ = f(S), same S
         return ae, aeo, asr, aso, scores, idx, x_bar
 
     def _imputation_round_reference(self, state: FGLState) -> FGLState:

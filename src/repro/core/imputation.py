@@ -56,46 +56,58 @@ KERNEL_IMPLS = ("reference", "pallas", "pallas_interpret")
 
 def similarity_topk(h: jnp.ndarray, flat_mask: jnp.ndarray, client_ids: jnp.ndarray,
                     k: int, *, kernel_impl: str = "reference", block: int = 256,
-                    target_mask: jnp.ndarray = None
+                    target_mask: jnp.ndarray = None, mesh=None
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Top-k most-similar cross-subgraph nodes per node.
 
-    Thin dispatcher over two paths that never materialize the full n×n gram
+    Thin dispatcher over paths that never materialize the full n×n gram
     matrix:
 
     - ``"reference"``: jnp row blocks — each [block, n] slab is masked and
-      reduced with ``jax.lax.top_k`` immediately.
+      reduced with ``jax.lax.top_k`` immediately. The same-client mask is
+      likewise built per row block ([block, n]), never as a full [n, n]
+      intermediate (pinned by a jaxpr regression in tests/test_ring_topk.py).
     - ``"pallas"`` / ``"pallas_interpret"``: the fused masked top-k kernel
       (kernels/sim_topk.py) — gram tile, same-client + target masking, and a
       running top-k all stay in VMEM across column tiles.
+    - ``mesh is not None``: the candidate-sharded ring driver
+      (core/ring_topk.py) — candidate slabs rotate around the mesh ring via
+      collective_permute and each device streams them into its partial top-k,
+      which after ``mesh.size`` steps IS the exact global answer (bit-
+      identical to ``"reference"``). ``h``/masks may carry a leading batch
+      axis here (one element per edge server), which rides along replicated.
 
     ``flat_mask`` marks valid *source* rows; ``target_mask`` (defaults to
     ``flat_mask``) marks slots allowed as link targets — the engine restricts
     it to real local slots so imputed aug nodes are never re-linked.
 
-    Returns (scores [n, k], idx [n, k]); rows with mask 0 and unfilled
-    candidate slots get idx -1 / score 0.
+    Returns (scores [.., n, k], idx [.., n, k]); rows with mask 0 and
+    unfilled candidate slots get idx -1 / score 0.
     """
     if target_mask is None:
         target_mask = flat_mask
-    n = h.shape[0]
-    if kernel_impl in ("pallas", "pallas_interpret"):
+    n = h.shape[-2]
+    if mesh is not None:
+        from repro.core.ring_topk import ring_similarity_topk
+        scores, idx = ring_similarity_topk(h, client_ids, target_mask, k,
+                                           mesh=mesh)
+    elif kernel_impl in ("pallas", "pallas_interpret"):
         from repro.kernels import ops as kops
         scores, idx = kops.sim_topk(h, client_ids, target_mask, k,
                                     block_m=block,
                                     interpret=(kernel_impl == "pallas_interpret"))
     elif kernel_impl == "reference":
-        same_client = client_ids[:, None] == client_ids[None, :]
         num_blocks = (n + block - 1) // block
         pad_n = num_blocks * block
         h_pad = jnp.pad(h, ((0, pad_n - n), (0, 0)))
-        same_pad = jnp.pad(same_client, ((0, pad_n - n), (0, 0)),
-                           constant_values=True)
+        cid_pad = jnp.pad(client_ids, (0, pad_n - n))
 
         def one_block(bi):
             rows = jax.lax.dynamic_slice_in_dim(h_pad, bi * block, block, axis=0)
             gram = rows @ h.T
-            same = jax.lax.dynamic_slice_in_dim(same_pad, bi * block, block, axis=0)
+            # Same-client mask per [block, n] slab — never the [n, n] matrix.
+            rcid = jax.lax.dynamic_slice_in_dim(cid_pad, bi * block, block)
+            same = rcid[:, None] == client_ids[None, :]
             gram = jnp.where(same, -jnp.inf, gram)           # cross-subgraph only
             gram = jnp.where(target_mask[None, :] > 0, gram, -jnp.inf)
             return jax.lax.top_k(gram, k)
@@ -106,7 +118,7 @@ def similarity_topk(h: jnp.ndarray, flat_mask: jnp.ndarray, client_ids: jnp.ndar
     else:
         raise ValueError(f"unknown kernel_impl {kernel_impl!r}; "
                          f"expected one of {KERNEL_IMPLS}")
-    valid = (flat_mask[:, None] > 0) & jnp.isfinite(scores)
+    valid = (flat_mask[..., None] > 0) & jnp.isfinite(scores)
     idx = jnp.where(valid, idx.astype(jnp.int32), -1)
     scores = jnp.where(valid, scores, 0.0)
     return scores, idx

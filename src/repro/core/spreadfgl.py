@@ -14,6 +14,12 @@ registered in :mod:`repro.core.registry`:
   parameter exchange only every K rounds (``cfg.gossip_every`` /
   ``gossip_every=``), executed on the edge mesh when one is supplied. K=1
   reproduces ``"SpreadFGL"`` exactly (see ``tests/test_gossip.py``).
+
+All three accept ``sim_mesh=`` — a jax Mesh to shard the imputation
+similarity search's CANDIDATE axis over (``--sim-shard`` in the launchers;
+:mod:`repro.core.ring_topk`). Orthogonal to ``edge_mesh``, which places the
+[N] server axis; ``launch/fgl_train.py`` reuses one mesh for both when both
+flags are set.
 """
 from __future__ import annotations
 
@@ -28,15 +34,17 @@ from repro.core.types import ClientBatch, FGLConfig
 
 
 @register("FedGL")
-def make_fedgl(cfg: FGLConfig, batch: ClientBatch, **kw) -> FGLTrainer:
+def make_fedgl(cfg: FGLConfig, batch: ClientBatch, *, sim_mesh=None,
+               **kw) -> FGLTrainer:
     return FGLTrainer(cfg, batch, topology=S.StarTopology(),
                       aggregator=S.FedAvgAggregator(),
-                      imputation=S.SpreadImputation(), **kw)
+                      imputation=S.SpreadImputation(sim_mesh=sim_mesh), **kw)
 
 
 @register("SpreadFGL")
 def make_spreadfgl(cfg: FGLConfig, batch: ClientBatch, *, num_servers: int = 3,
-                   adjacency: Optional[np.ndarray] = None, **kw) -> FGLTrainer:
+                   adjacency: Optional[np.ndarray] = None, sim_mesh=None,
+                   **kw) -> FGLTrainer:
     if adjacency is not None:
         if adjacency.shape[0] != num_servers:
             raise ValueError(f"adjacency is {adjacency.shape[0]}x"
@@ -46,14 +54,14 @@ def make_spreadfgl(cfg: FGLConfig, batch: ClientBatch, *, num_servers: int = 3,
         topology = S.RingTopology(num_servers)
     return FGLTrainer(cfg, batch, topology=topology,
                       aggregator=S.NeighborAggregator(),
-                      imputation=S.SpreadImputation(), **kw)
+                      imputation=S.SpreadImputation(sim_mesh=sim_mesh), **kw)
 
 
 @register("spreadfgl_gossip")
 def make_spreadfgl_gossip(cfg: FGLConfig, batch: ClientBatch, *,
                           num_servers: int = 3, gossip_every: Optional[int] = None,
                           adjacency: Optional[np.ndarray] = None,
-                          edge_mesh=None, **kw) -> FGLTrainer:
+                          edge_mesh=None, sim_mesh=None, **kw) -> FGLTrainer:
     """SpreadFGL with decentralized gossip training at the edge (Sec. III-E).
 
     Identical to ``"SpreadFGL"`` except aggregation: servers FedAvg their own
@@ -76,4 +84,5 @@ def make_spreadfgl_gossip(cfg: FGLConfig, batch: ClientBatch, *,
     aggregator = S.GossipAggregator(topology=kind, every_k=every,
                                     mesh=edge_mesh)
     return FGLTrainer(cfg, batch, topology=topology, aggregator=aggregator,
-                      imputation=S.SpreadImputation(), edge_mesh=edge_mesh, **kw)
+                      imputation=S.SpreadImputation(sim_mesh=sim_mesh),
+                      edge_mesh=edge_mesh, **kw)

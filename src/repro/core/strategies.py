@@ -370,7 +370,7 @@ class NoImputation:
         return state
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class SpreadImputation:
     """SpreadFGL's generator round (Algorithm 1 lines 11-24).
 
@@ -380,7 +380,17 @@ class SpreadImputation:
     vmap (shardable across an edge mesh); per-server results are stitched
     back to the global flat index space by
     :func:`patcher.stitch_server_links`.
+
+    With ``sim_mesh`` set (same pattern as ``GossipAggregator.mesh``) the
+    similarity top-k is lifted OUT of the vmapped server round and runs once,
+    batched over the [N] axis, through the candidate-sharded ring driver
+    (:mod:`repro.core.ring_topk`): each mesh device owns an [n/size] slice of
+    every server's candidate axis and slabs rotate via collective_permute.
+    The ring result is bit-identical to the in-vmap reference, so the two
+    layouts are interchangeable (pinned in ``tests/test_ring_topk.py``).
     """
+
+    sim_mesh: Any = None          # optional jax Mesh to shard candidates over
 
     active = True
 
@@ -400,11 +410,29 @@ class SpreadImputation:
         keys = jax.random.split(state.key, n + 1)
         key, server_keys = keys[0], keys[1:]
         client_ids = imputation.client_of_flat(mp, n_pad)
-        outs = jax.vmap(
-            engine._server_round, in_axes=(0, 0, 0, 0, 0, 0, 0, None)
+        if self.sim_mesh is None:
+            outs = jax.vmap(
+                engine._server_round, in_axes=(0, 0, 0, 0, 0, 0, 0, None)
+            )(server_keys, state.ae_params, state.ae_opt, state.as_params,
+              state.as_opt, emb_g, mask_g, client_ids)
+            return outs, key
+        # Sharded path: vmap ONLY the generator half; the similarity runs
+        # once over the stacked [N, n_flat, c] fused embeddings so shard_map
+        # is the outermost transform (vmap-inside-shard_map composes; the
+        # reverse does not). Numerically identical: the generator consumes
+        # all the round's randomness, similarity is deterministic in h_flat.
+        (ae, aeo, asr, aso, x_bar, h_all, fmask_all) = jax.vmap(
+            engine._server_round_gen, in_axes=(0, 0, 0, 0, 0, 0, 0)
         )(server_keys, state.ae_params, state.ae_opt, state.as_params,
-          state.as_opt, emb_g, mask_g, client_ids)
-        return outs, key
+          state.as_opt, emb_g, mask_g)
+        tmask_all = fmask_all * imputation.local_slot_mask(
+            mp, n_pad, engine.n_local)[None, :]
+        cid_all = jnp.broadcast_to(client_ids, fmask_all.shape)
+        scores, idx = imputation.similarity_topk(
+            h_all, fmask_all, cid_all, engine.cfg.top_k_links,
+            kernel_impl=engine.kernel_impl, target_mask=tmask_all,
+            mesh=self.sim_mesh)
+        return (ae, aeo, asr, aso, scores, idx, x_bar), key
 
     def impute(self, engine, state):
         (ae_params, ae_opt, as_params, as_opt, scores, idx,

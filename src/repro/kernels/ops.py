@@ -110,16 +110,18 @@ def sim_block(rows: jnp.ndarray, h: jnp.ndarray, *, block_m: int = 128,
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_m", "block_n",
-                                             "interpret"))
+                                             "col_offset", "interpret"))
 def sim_topk(h: jnp.ndarray, client_ids: jnp.ndarray, target_mask: jnp.ndarray,
              k: int, *, block_m: int = 128, block_n: int = 512,
-             interpret: bool = False):
+             col_offset: int = 0, interpret: bool = False):
     """Fused masked top-k similarity; accepts arbitrary [n,c]/[n]/[n].
 
     Per row of h: the k most similar rows of h whose ``client_ids`` differ
-    and whose ``target_mask`` is set. Returns (vals [n, k] f32 with -inf on
-    missing candidates, idx [n, k] int32 with -1 where never filled).
-    Column padding gets mask 0, so padded slots can never be selected.
+    and whose ``target_mask`` is set. ``col_offset`` shifts emitted indices
+    to the global candidate axis when h is one shard of it. Returns (vals
+    [n, k] f32 with -inf on missing candidates, idx [n, k] int32 with -1
+    where never filled). Column padding gets mask 0, so padded slots can
+    never be selected.
     """
     n = h.shape[0]
     block_m = min(block_m, max(8, n))
@@ -132,5 +134,5 @@ def sim_topk(h: jnp.ndarray, client_ids: jnp.ndarray, target_mask: jnp.ndarray,
     col_mask = _pad_to(target_mask.astype(jnp.float32)[None, :], 1, block_n)
     vals, idx = _sim.sim_topk(rows_p, h_p, row_cid, col_cid, col_mask, k,
                               block_m=block_m, block_n=block_n,
-                              interpret=interpret)
+                              col_offset=col_offset, interpret=interpret)
     return vals[:n], idx[:n]

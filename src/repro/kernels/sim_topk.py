@@ -20,8 +20,9 @@ is dominated by streaming H, which the column grid tiles through VMEM.
 Masked-out candidates carry -inf values; the running top-k seeds index slots
 with -1, so rows with fewer than k valid candidates surface (-inf, -1) pairs
 that ``imputation.similarity_topk`` maps to the (0.0, -1) convention. The
-streaming merge breaks ties by smallest candidate index (earlier column tiles
-win), matching ``jax.lax.top_k`` on distinct values.
+streaming merge (:func:`topk_merge`, shared with the candidate-sharded ring
+driver in ``core/ring_topk.py``) breaks ties by smallest candidate index,
+matching ``jax.lax.top_k``.
 """
 from __future__ import annotations
 
@@ -34,9 +35,52 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def topk_merge(run_v: jnp.ndarray, run_i: jnp.ndarray, slab_v: jnp.ndarray,
+               slab_i: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fold a candidate slab into a running (values, indices) top-k.
+
+    The ONE streaming top-k merge shared by the fused Pallas kernel (column
+    tiles arriving left to right), the jnp reference path, and the ring-
+    sharded driver (``core/ring_topk.py``, candidate shards arriving in
+    rotation order — NOT in index order). ``run_v``/``run_i`` are the
+    ``[..., k]`` running top-k (-inf values / -1 indices on unfilled slots);
+    ``slab_v``/``slab_i`` are a ``[..., m]`` slab of new candidates with
+    -inf on masked entries and their (global) candidate indices.
+
+    Selects the k largest of the k+m candidates with k unrolled argmax
+    passes (k is small — the paper uses k ≤ 5 — and Mosaic has no sort/
+    top_k primitive). Ties break by SMALLEST candidate index — jax.lax.
+    top_k's tie-break on the full row — by value, not by position, so the
+    result is independent of the order slabs are folded in: this is the
+    invariant that lets per-shard partial top-ks over rotating candidate
+    slabs finish bit-identical to the single-device reference.
+
+    Exhausted rows (best == -inf) select among stale popped entries and
+    unfilled -1 slots; the emitted index is forced to -1 either way, so
+    rows with fewer than k valid candidates keep the (-inf, -1) convention.
+    Live candidates always carry distinct indices (each candidate is folded
+    exactly once), so exactly one entry pops per pass.
+    """
+    k = run_v.shape[-1]
+    cand_v = jnp.concatenate([run_v, slab_v], axis=-1)     # [..., k+m]
+    cand_i = jnp.concatenate([run_i, slab_i], axis=-1)
+    new_v, new_i = [], []
+    for _ in range(k):
+        best = jnp.max(cand_v, axis=-1, keepdims=True)     # [..., 1]
+        at_best = cand_v == best
+        sel_i = jnp.min(jnp.where(at_best, cand_i, jnp.int32(2**30)),
+                        axis=-1, keepdims=True)
+        sel = at_best & (cand_i == sel_i)
+        new_v.append(best)
+        new_i.append(jnp.where(best > -jnp.inf, sel_i, -1))
+        cand_v = jnp.where(sel, -jnp.inf, cand_v)
+    return (jnp.concatenate(new_v, axis=-1),
+            jnp.concatenate(new_i, axis=-1))
+
+
 def _sim_topk_kernel(rows_ref, h_ref, row_cid_ref, col_cid_ref, col_mask_ref,
                      vals_ref, idx_ref, vals_scratch, idx_scratch,
-                     *, k: int, block_n: int):
+                     *, k: int, block_n: int, col_offset: int):
     ki = pl.program_id(1)
     nk = pl.num_programs(1)
 
@@ -53,32 +97,13 @@ def _sim_topk_kernel(rows_ref, h_ref, row_cid_ref, col_cid_ref, col_mask_ref,
     # Fused masking: cross-subgraph only + valid candidate targets only.
     keep = (row_cid_ref[...] != col_cid_ref[...]) & (col_mask_ref[...] > 0)
     s = jnp.where(keep, s, -jnp.inf)
-    col_idx = ki * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-
-    # Merge the tile into the running top-k: select the k largest of the
-    # k + block_n candidates with k unrolled argmax passes (k is small — the
-    # paper uses k ≤ 5 — and Mosaic has no sort/top_k primitive).
-    cand_v = jnp.concatenate([vals_scratch[...], s], axis=1)       # [bm, k+bn]
-    cand_i = jnp.concatenate([idx_scratch[...], col_idx], axis=1)
-    pos = jax.lax.broadcasted_iota(jnp.int32, cand_v.shape, 1)
-    new_v, new_i = [], []
-    for _ in range(k):
-        best = jnp.max(cand_v, axis=1, keepdims=True)              # [bm, 1]
-        # First position attaining the max: running entries sit at positions
-        # < k and hold smaller original indices than this tile's columns, so
-        # min-position == jax.lax.top_k's smallest-index tie-break.
-        at_best = cand_v == best
-        sel_pos = jnp.min(jnp.where(at_best, pos, jnp.int32(2**30)),
-                          axis=1, keepdims=True)
-        sel = pos == sel_pos
-        chosen = jnp.sum(jnp.where(sel, cand_i, 0), axis=1, keepdims=True)
-        # Exhausted rows (best == -inf) re-select an already-popped position
-        # whose cand_i is stale: keep the unfilled-slot convention idx = -1.
-        new_v.append(best)
-        new_i.append(jnp.where(best > -jnp.inf, chosen, -1))
-        cand_v = jnp.where(sel, -jnp.inf, cand_v)
-    vals_scratch[...] = jnp.concatenate(new_v, axis=1)
-    idx_scratch[...] = jnp.concatenate(new_i, axis=1)
+    # col_offset shifts local column positions to GLOBAL candidate indices
+    # when the caller owns one shard of a larger candidate axis.
+    col_idx = (col_offset + ki * block_n
+               + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1))
+    new_v, new_i = topk_merge(vals_scratch[...], idx_scratch[...], s, col_idx)
+    vals_scratch[...] = new_v
+    idx_scratch[...] = new_i
 
     @pl.when(ki == nk - 1)
     def _finalize():
@@ -88,13 +113,15 @@ def _sim_topk_kernel(rows_ref, h_ref, row_cid_ref, col_cid_ref, col_mask_ref,
 
 def sim_topk(rows: jnp.ndarray, h: jnp.ndarray, row_cid: jnp.ndarray,
              col_cid: jnp.ndarray, col_mask: jnp.ndarray, k: int, *,
-             block_m: int = 128, block_n: int = 512,
+             block_m: int = 128, block_n: int = 512, col_offset: int = 0,
              interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused masked top-k over the gram similarity rows @ hᵀ.
 
     rows: [b, c] query nodes; h: [n, c] candidate nodes; row_cid: [b, 1] and
     col_cid: [1, n] owning-client ids; col_mask: [1, n] valid-target mask
-    (padding handled by ops.py). Returns (vals [b, k] f32 with -inf on
+    (padding handled by ops.py). ``col_offset`` shifts emitted indices so a
+    caller holding one shard of a larger candidate axis (``core/ring_topk``)
+    gets GLOBAL candidate indices. Returns (vals [b, k] f32 with -inf on
     missing candidates, idx [b, k] int32 with -1 where never filled).
     """
     b, c = rows.shape
@@ -104,7 +131,8 @@ def sim_topk(rows: jnp.ndarray, h: jnp.ndarray, row_cid: jnp.ndarray,
     assert 1 <= k <= n, (k, n)
 
     grid = (b // block_m, n // block_n)
-    kernel = functools.partial(_sim_topk_kernel, k=k, block_n=block_n)
+    kernel = functools.partial(_sim_topk_kernel, k=k, block_n=block_n,
+                               col_offset=col_offset)
     return pl.pallas_call(
         kernel,
         grid=grid,

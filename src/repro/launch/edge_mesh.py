@@ -36,6 +36,12 @@ header above. ``--gossip-every 0`` (the default) keeps dense per-round
 Eq. 16 neighbor aggregation; any K >= 1 switches to the
 ``spreadfgl_gossip`` composition (K=1 is numerically the dense rule with
 the exchange routed through the mesh collectives).
+
+``--sim-shard`` additionally rotates the imputation round's CANDIDATE axis
+around the same mesh as a ring (``core/ring_topk.py``): each device streams
+every other device's candidate slab through collective_permute and folds it
+into its running top-k — bit-identical results, 1/size candidate residency
+per device.
 """
 import argparse
 import time
@@ -60,12 +66,19 @@ def main() -> None:
     ap.add_argument("--gossip-every", type=int, default=0,
                     help="cross-server exchange interval K (0 = dense "
                          "per-round Eq. 16 aggregation)")
+    ap.add_argument("--sim-shard", action="store_true",
+                    help="ring-rotate the imputation candidate axis around "
+                         "the mesh (core/ring_topk.py; bit-identical results)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     mesh = make_edge_mesh(args.servers)
     print(f"[edge-mesh] {len(jax.devices())} device(s); mesh size {mesh.size} "
           f"for N={args.servers} edge servers")
+    sim_mesh = mesh if args.sim_shard else None
+    if args.sim_shard:
+        print(f"[edge-mesh] sim shard: candidate slabs ring-rotate over "
+              f"{mesh.size} device(s)")
 
     graph = make_sbm_graph(DATASETS[args.dataset], scale=0.15, seed=args.seed + 1,
                            feature_noise=3.0, signal_ratio=0.5)
@@ -78,10 +91,10 @@ def main() -> None:
               f"{args.gossip_every} round(s) over the mesh")
         tr = make_spreadfgl_gossip(cfg, batch, num_servers=args.servers,
                                    gossip_every=args.gossip_every,
-                                   edge_mesh=mesh)
+                                   edge_mesh=mesh, sim_mesh=sim_mesh)
     else:
         tr = make_spreadfgl(cfg, batch, num_servers=args.servers,
-                            edge_mesh=mesh)
+                            edge_mesh=mesh, sim_mesh=sim_mesh)
 
     state = tr.init(jax.random.key(args.seed), batch)
     placement = {d.id for leaf in jax.tree.leaves(state.ae_params)

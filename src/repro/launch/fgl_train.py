@@ -6,7 +6,8 @@
       [--partitioner label_prop] [--alpha 1.0] [--participation 1.0] \\
       [--label-ratio 0.3] [--scale 0.15] [--feature-noise 3.0] \\
       [--signal-ratio 0.5] [--seed 0] [--impl reference] [--gossip-every 1] \\
-      [--edge-mesh] [--json-out hist.json] [--save-state s.npz] [--resume s.npz]
+      [--edge-mesh] [--sim-shard] [--json-out hist.json] \\
+      [--save-state s.npz] [--resume s.npz]
 
 Every method resolves through ``repro.core.registry`` — the same strategy
 compositions the benchmarks and examples use (see ``registry.names()`` /
@@ -20,7 +21,12 @@ kernels in interpret mode — bitwise the same code path as ``pallas``,
 runnable on CPU). ``--gossip-every K`` (method ``spreadfgl_gossip``) makes
 edge servers exchange parameters with topology neighbors only every K
 rounds instead of dense per-round Eq. 16 averaging; combine with
-``--edge-mesh`` to place the exchange on the device mesh.
+``--edge-mesh`` to place the exchange on the device mesh. ``--sim-shard``
+shards the CANDIDATE axis of the imputation similarity top-k across devices
+(candidate slabs ring-rotate via collective_permute, ``core/ring_topk.py``);
+the result is bit-identical to the single-device search, and when combined
+with ``--edge-mesh`` one mesh carries both the [N] server axis and the
+candidate ring.
 
 Heterogeneity axis (``docs/BENCHMARKS.md``): ``--partitioner`` picks the
 client-split strategy (``label_prop`` default, ``dirichlet`` label-skew
@@ -89,6 +95,11 @@ def main() -> None:
     ap.add_argument("--edge-mesh", action="store_true",
                     help="shard the [N] edge-server axis across devices "
                          "(SpreadFGL only)")
+    ap.add_argument("--sim-shard", action="store_true",
+                    help="shard the CANDIDATE axis of the imputation "
+                         "similarity top-k across devices (ring rotation via "
+                         "collective_permute, core/ring_topk.py); with "
+                         "--edge-mesh the same mesh carries both axes")
     args = ap.parse_args()
 
     graph = make_sbm_graph(DATASETS[args.dataset], scale=args.scale,
@@ -137,6 +148,20 @@ def main() -> None:
             kw["edge_mesh"] = make_edge_mesh(args.servers)
             print(f"[fgl] edge mesh: {kw['edge_mesh'].size} device(s) for "
                   f"N={args.servers}")
+    if args.sim_shard:
+        if args.method not in ("FedGL", "SpreadFGL", "spreadfgl_gossip"):
+            ap.error(f"--sim-shard needs an imputation round to shard; "
+                     f"--method {args.method} has none")
+        if "edge_mesh" in kw:
+            # One mesh, two roles: the [N] server axis lives on it as data
+            # placement, the candidate axis rotates around it as a ring —
+            # mixing two Meshes in one jitted program is the fragile case.
+            kw["sim_mesh"] = kw["edge_mesh"]
+        else:
+            from repro.launch.mesh import make_sim_mesh
+            kw["sim_mesh"] = make_sim_mesh()
+        print(f"[fgl] sim shard: candidate axis over "
+              f"{kw['sim_mesh'].size} device(s)")
     if args.method == "spreadfgl_gossip":
         print(f"[fgl] gossip aggregation: cross-server exchange every "
               f"{args.gossip_every} round(s)")

@@ -32,6 +32,18 @@ def make_edge_mesh(num_servers: int, *, devices: int = 0) -> Mesh:
     return Mesh(jax.devices()[:size], ("edge",))
 
 
+def make_sim_mesh(*, devices: int = 0) -> Mesh:
+    """1-D mesh carrying the CANDIDATE axis of the imputation similarity
+    search (``core/ring_topk.py``; ``--sim-shard`` in the launchers).
+
+    Unlike :func:`make_edge_mesh` there is no divisibility constraint — the
+    ring driver pads the candidate axis to a mesh-size multiple — so this
+    simply takes the first ``devices`` devices (default: all of them).
+    """
+    n = min(devices or len(jax.devices()), len(jax.devices()))
+    return Mesh(jax.devices()[:n], ("sim",))
+
+
 def make_host_mesh(*, model: int = 1, data: int = 0, pod: int = 0) -> Mesh:
     """Small mesh over whatever host devices exist (tests/examples)."""
     n = len(jax.devices())

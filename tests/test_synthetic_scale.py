@@ -1,0 +1,96 @@
+"""The scale-up regime of the synthetic graph generator.
+
+``scale > 1.0`` is the documented way to grow a Table-I dataset toward the
+10k–1M-node range swept by ``benchmarks/bench_sim_scaling.py``; these tests
+make that regime trustworthy: deterministic, monotone in size, statistically
+an SBM (homophilous), and routed through the vectorized sampler — while the
+``scale <= 1.0`` path keeps the historical per-edge rng stream that every
+fixed-seed golden in the suite depends on.
+"""
+import numpy as np
+import pytest
+
+from repro.data import synthetic_graphs as sg
+from repro.data.synthetic_graphs import DATASETS, DatasetStats, make_sbm_graph
+
+
+class TestScaleUpRegime:
+    def test_deterministic_at_scale_4(self):
+        a = make_sbm_graph(DATASETS["cora"], scale=4.0, seed=3)
+        b = make_sbm_graph(DATASETS["cora"], scale=4.0, seed=3)
+        np.testing.assert_array_equal(a.x, b.x)
+        np.testing.assert_array_equal(a.y, b.y)
+        np.testing.assert_array_equal(a.senders, b.senders)
+        np.testing.assert_array_equal(a.receivers, b.receivers)
+
+    def test_node_and_edge_counts_monotone_in_scale(self):
+        nodes, edges = [], []
+        for s in (0.5, 1.0, 2.0, 4.0):
+            g = make_sbm_graph(DATASETS["cora"], scale=s, seed=0)
+            nodes.append(g.x.shape[0])
+            edges.append(g.senders.size)
+        assert nodes == sorted(nodes) and nodes[0] < nodes[-1], nodes
+        assert edges == sorted(edges) and edges[0] < edges[-1], edges
+        # Node counts track the requested scale exactly.
+        assert nodes[1] == DATASETS["cora"].num_nodes
+        assert nodes[3] == 4 * DATASETS["cora"].num_nodes
+
+    def test_feature_dim_saturates_at_dataset_dim(self):
+        """Growing n must not also inflate every feature row: d caps at the
+        dataset's real feature_dim from scale 0.25 on."""
+        d_ref = DATASETS["cora"].feature_dim
+        for s in (0.25, 1.0, 4.0):
+            g = make_sbm_graph(DATASETS["cora"], scale=s, seed=0)
+            assert g.x.shape[1] == d_ref, (s, g.x.shape)
+        small = make_sbm_graph(DATASETS["cora"], scale=0.1, seed=0)
+        assert small.x.shape[1] < d_ref
+
+    def test_scaled_up_graph_stays_homophilous(self):
+        g = make_sbm_graph(DATASETS["cora"], scale=4.0, seed=0)
+        intra = np.mean(g.y[g.senders] == g.y[g.receivers])
+        # Dedup of intra-class duplicates pulls the realized fraction a bit
+        # off the target; it must still be far above the ~1/c chance level.
+        assert intra > 0.6, intra
+
+    def test_million_node_stats_supported(self):
+        """bench_sim_scaling's generator contract: custom stats + scale > 1
+        produce the exact requested node count with no self-loops."""
+        stats = DatasetStats("big", 25_000, 50_000, 32, 10, 0.7)
+        g = make_sbm_graph(stats, scale=2.0, seed=0)
+        assert g.x.shape == (50_000, 32)
+        assert g.num_classes == 10
+        assert (g.senders != g.receivers).all()
+        assert g.senders.min() >= 0 and g.receivers.max() < 50_000
+
+
+class TestSamplerRouting:
+    def test_small_scale_uses_historical_loop_sampler(self, monkeypatch):
+        calls = {"loop": 0, "vec": 0}
+        orig_loop, orig_vec = sg._sample_edges_loop, sg._sample_edges_vectorized
+        monkeypatch.setattr(sg, "_sample_edges_loop",
+                            lambda *a: calls.__setitem__("loop", calls["loop"] + 1)
+                            or orig_loop(*a))
+        monkeypatch.setattr(sg, "_sample_edges_vectorized",
+                            lambda *a: calls.__setitem__("vec", calls["vec"] + 1)
+                            or orig_vec(*a))
+        make_sbm_graph(DATASETS["cora"], scale=0.2, seed=0)
+        make_sbm_graph(DATASETS["cora"], scale=1.0, seed=0)  # boundary: loop
+        assert calls == {"loop": 2, "vec": 0}
+        make_sbm_graph(DATASETS["cora"], scale=1.5, seed=0)
+        assert calls == {"loop": 2, "vec": 1}
+
+    def test_samplers_share_distribution(self):
+        """Same SBM family: loop and vectorized samplers at matched size
+        agree on edge count and intra-class fraction within noise."""
+        stats = DATASETS["cora"]
+        g_loop = make_sbm_graph(stats, scale=1.0, seed=0)
+        big = DatasetStats(stats.name, stats.num_nodes // 2,
+                           stats.num_edges // 2, stats.feature_dim,
+                           stats.num_classes, stats.homophily)
+        g_vec = make_sbm_graph(big, scale=2.0, seed=0)
+        assert g_vec.x.shape[0] == g_loop.x.shape[0]
+        n_edges = (g_loop.senders.size, g_vec.senders.size)
+        assert abs(n_edges[0] - n_edges[1]) / max(n_edges) < 0.05, n_edges
+        f_loop = np.mean(g_loop.y[g_loop.senders] == g_loop.y[g_loop.receivers])
+        f_vec = np.mean(g_vec.y[g_vec.senders] == g_vec.y[g_vec.receivers])
+        assert abs(f_loop - f_vec) < 0.05, (f_loop, f_vec)
