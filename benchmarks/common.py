@@ -57,6 +57,7 @@ _REGISTRY_NAMES = {
     "FedGL": ("FedGL", {}),
     "SpreadFGL": ("SpreadFGL", {"num_servers": 3}),
     "SpreadFGL-gossip": ("spreadfgl_gossip", {"num_servers": 3}),
+    "SpreadFGL-async": ("spreadfgl_async", {"num_servers": 3}),
 }
 
 

@@ -227,9 +227,36 @@ class FGLTrainer:
         phase is canonicalized to ``period - 1`` (exchange) or ``0`` (skip):
         exactly 2 compiled variants regardless of K, instead of one cache
         entry per distinct ``t % period``.
+
+        Buffered aggregators (:class:`strategies.AsyncAggregator`) expose a
+        ``phase(t, m)`` hook instead of a fixed period — their flush schedule
+        is data-independent but not periodic. The hook still returns only
+        0/1, so jit still sees exactly 2 variants.
         """
+        hook = getattr(self.aggregator, "phase", None)
+        if hook is not None:
+            return int(hook(t, self.m))
         p = self._agg_period
         return p - 1 if (t + 1) % p == 0 else 0
+
+    def _agg_mask(self, t: int):
+        """The [M] weight vector of round ``t``'s aggregation, or None.
+
+        Composes the two per-round weight sources: the participation mask
+        (ρ < 1) and, for buffered aggregators exposing ``round_weights(t,
+        m)``, the staleness-discount weights of the flush. Both are pure
+        functions of (cfg.seed, t), so the composition is too. A client
+        sampled out by ρ < 1 contributes zero weight even if its (stale)
+        update sits in the buffer.
+        """
+        mask = self._participation_mask(t)
+        hook = getattr(self.aggregator, "round_weights", None)
+        if hook is None:
+            return mask
+        weights = hook(t, self.m)
+        if weights is None or mask is None:
+            return weights if weights is not None else mask
+        return weights * mask
 
     def _participation_mask(self, t: int):
         """[M] 0/1 participation mask of round ``t``, or None at ρ = 1.
@@ -253,6 +280,8 @@ class FGLTrainer:
         call. ``mask`` is an optional [M] participation mask (``step()``
         passes the round's sampled mask when ``cfg.participation < 1``).
         """
+        if mask is None:
+            mask = self._agg_mask(int(round))
         return self._agg_fn(params, round=self._agg_phase(int(round)),
                             mask=mask)
 
@@ -415,11 +444,12 @@ class FGLTrainer:
             state.params, state.opt_state, state.batch)
         if self.imputation.active and (t % self.cfg.imputation_interval == 0):
             state = self._impute_fn(state)
-        # The gossip phase and the participation mask are pure functions of
-        # the absolute round, so a state restored mid-interval resumes both
-        # schedules exactly where the checkpoint left them.
+        # The gossip phase, the participation mask, and the async flush
+        # schedule are pure functions of the absolute round, so a state
+        # restored mid-interval (or mid-buffer) resumes every schedule
+        # exactly where the checkpoint left it.
         state.params = self._agg_fn(state.params, round=self._agg_phase(t),
-                                    mask=self._participation_mask(t))
+                                    mask=self._agg_mask(t))
         loss, acc, f1 = self._eval_fn(state.params, state.batch)
         state.round = t + 1
         return state, {"round": t, "loss": loss, "acc": acc, "f1": f1}

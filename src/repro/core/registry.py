@@ -10,8 +10,9 @@ Topology, an Aggregator, and an ImputationStrategy (see
 
 Stock methods (see ``docs/PAPER_MAP.md`` for the paper mapping):
 ``FedGL``, ``SpreadFGL``, ``spreadfgl_gossip`` (decentralized gossip
-aggregation over the edge mesh, Sec. III-E), ``local``, ``fedavg_fusion``,
-``fedsage_plus``.
+aggregation over the edge mesh, Sec. III-E), ``spreadfgl_async`` (FedBuff-
+style buffered straggler-tolerant aggregation, Sec. III-E), ``local``,
+``fedavg_fusion``, ``fedsage_plus``.
 
 Builders register themselves at import time via :func:`register`; resolving a
 name lazily imports the modules that define the stock methods

@@ -14,6 +14,12 @@ registered in :mod:`repro.core.registry`:
   parameter exchange only every K rounds (``cfg.gossip_every`` /
   ``gossip_every=``), executed on the edge mesh when one is supplied. K=1
   reproduces ``"SpreadFGL"`` exactly (see ``tests/test_gossip.py``).
+- ``make_spreadfgl_async`` (``"spreadfgl_async"``): same layout but with
+  :class:`~repro.core.strategies.AsyncAggregator` — FedBuff-style buffered
+  aggregation with straggler delays, mid-round dropouts, and staleness
+  discounting (``cfg.async_buffer`` / ``async_buffer=``). B = M with zero
+  delays reproduces ``"FedGL"`` / ``"SpreadFGL"``-per-server FedAvg
+  bit-identically (see ``tests/test_async_agg.py``).
 
 All three accept ``sim_mesh=`` — a jax Mesh to shard the imputation
 similarity search's CANDIDATE axis over (``--sim-shard`` in the launchers;
@@ -86,3 +92,49 @@ def make_spreadfgl_gossip(cfg: FGLConfig, batch: ClientBatch, *,
     return FGLTrainer(cfg, batch, topology=topology, aggregator=aggregator,
                       imputation=S.SpreadImputation(sim_mesh=sim_mesh),
                       edge_mesh=edge_mesh, **kw)
+
+
+@register("spreadfgl_async")
+def make_spreadfgl_async(cfg: FGLConfig, batch: ClientBatch, *,
+                         num_servers: int = 3,
+                         async_buffer: Optional[int] = None,
+                         adjacency: Optional[np.ndarray] = None,
+                         sim_mesh=None, **kw) -> FGLTrainer:
+    """SpreadFGL with FedBuff-style async straggler-tolerant aggregation.
+
+    Same edge layout and generator round as ``"SpreadFGL"`` (star when
+    ``num_servers == 1``, i.e. async FedGL), but aggregation is the buffered
+    :class:`~repro.core.strategies.AsyncAggregator`: client updates arrive
+    with per-round delays drawn from ``cfg.delay_dist``, drop out mid-round
+    with probability ``cfg.dropout_rate``, and each edge server flushes a
+    staleness-discounted mean only once ``async_buffer`` (default
+    ``cfg.async_buffer``) updates are buffered. The schedule is a pure
+    function of ``(cfg.seed, round)`` — save/resume mid-buffer is exact.
+    With B = M, zero delays, and no dropouts the histories reproduce the
+    synchronous FedAvg compositions bit-identically
+    (``tests/test_async_agg.py``).
+    """
+    buffer = int(async_buffer) if async_buffer is not None else cfg.async_buffer
+    if buffer < 1:
+        raise ValueError(f"spreadfgl_async needs async_buffer >= 1, "
+                         f"got {buffer} (set cfg.async_buffer or pass "
+                         f"async_buffer=)")
+    if buffer > batch.num_clients:
+        raise ValueError(f"async_buffer={buffer} can never fill: the buffer "
+                         f"holds at most one update per client "
+                         f"(M={batch.num_clients})")
+    if num_servers == 1:
+        topology: S.Topology = S.StarTopology()
+    elif adjacency is not None:
+        if adjacency.shape[0] != num_servers:
+            raise ValueError(f"adjacency is {adjacency.shape[0]}x"
+                             f"{adjacency.shape[1]} but num_servers={num_servers}")
+        topology = S.CustomTopology(adjacency)
+    else:
+        topology = S.RingTopology(num_servers)
+    aggregator = S.AsyncAggregator(
+        buffer_size=buffer, delay_dist=cfg.delay_dist,
+        dropout_rate=cfg.dropout_rate, max_delay=cfg.async_max_delay,
+        seed=cfg.seed)
+    return FGLTrainer(cfg, batch, topology=topology, aggregator=aggregator,
+                      imputation=S.SpreadImputation(sim_mesh=sim_mesh), **kw)

@@ -10,10 +10,15 @@ implementations here:
   variants swap this axis.
 - :class:`Aggregator` — how client classifiers are combined each round
   (FedAvg, Eq. 16 neighbor aggregation, gossip-SGD over the edge mesh,
-  identity for purely local training). FedGTA-style variants swap this
-  axis. Aggregators that schedule cross-server exchanges (gossip every K
-  rounds) advertise a ``period``; the engine passes ``round`` canonicalized
-  to the exchange/skip phase so jit sees exactly 2 static variants.
+  FedBuff-style buffered async aggregation, identity for purely local
+  training). FedGTA-style variants swap this axis. Aggregators that
+  schedule cross-server exchanges (gossip every K rounds) advertise a
+  ``period``; the engine passes ``round`` canonicalized to the
+  exchange/skip phase so jit sees exactly 2 static variants. Buffered
+  aggregators (:class:`AsyncAggregator`) instead expose ``phase``/
+  ``round_weights`` hooks — the flush schedule and the staleness weights
+  are pure functions of ``(cfg.seed, round)``, so jit still sees exactly
+  2 static variants (flush / skip) and save/resume mid-buffer is exact.
 - :class:`ImputationStrategy` — what happens on the every-K graph-fixing
   round (the SpreadFGL generator round, FedSage+'s local neighbor
   generation, or nothing).
@@ -343,6 +348,227 @@ class GossipAggregator:
         if use_ring:
             return gossip.block_ring_gossip(w)
         return gossip.adjacency_gossip(w, adj)
+
+
+# ---------------------------------------------------------------------------
+# Async straggler-tolerant aggregation (FedBuff-style).
+# ---------------------------------------------------------------------------
+
+ASYNC_DELAY_DISTS = ("zero", "uniform", "geometric")
+
+# Salt for the async delay/dropout key stream. Distinct from the
+# participation salt (0x9A57 in FGLTrainer) and never folded into the
+# training key threaded through FGLState: enabling async aggregation does
+# not perturb any other random stream, and the round-t draws are a pure
+# function of (seed, t) — the property that makes mid-buffer resume exact.
+_ASYNC_SALT = 0xA57C
+
+
+def async_delay_stream(seed: int, round: int, num_clients: int, *,
+                       delay_dist: str = "zero", max_delay: int = 4,
+                       dropout_rate: float = 0.0):
+    """Round-``round`` arrival delays and dropout flags, per client.
+
+    Returns ``(delays int32 [M], drops bool [M])`` numpy arrays: ``delays[i]``
+    is how many rounds client i's update sent this round stays in flight
+    (0 = arrives the same round), ``drops[i]`` marks a mid-round dropout —
+    the update is lost at send time and the client retries next round.
+
+    The draws come from ``fold_in(fold_in(key(seed), salt), round)`` — the
+    same keyed-stream idiom as :func:`participation_mask` but under a
+    different salt, so the two schedules are independent of each other AND
+    of the training key. Same (seed, round) always reproduces the same
+    delays; a checkpoint restored at round t replays rounds 0..t-1 of the
+    stream to rebuild the buffer exactly.
+
+    Distributions: ``"zero"`` — no delay (the synchronous limit);
+    ``"uniform"`` — uniform on {0..max_delay}; ``"geometric"`` — p=1/2
+    geometric on {0, 1, 2, ...} (mean 1), capped at ``max_delay``.
+    """
+    if delay_dist not in ASYNC_DELAY_DISTS:
+        raise ValueError(f"unknown delay_dist {delay_dist!r}; "
+                         f"expected one of {ASYNC_DELAY_DISTS}")
+    if max_delay < 0:
+        raise ValueError(f"max_delay must be >= 0, got {max_delay}")
+    if not 0.0 <= dropout_rate < 1.0:
+        raise ValueError(f"dropout_rate must be in [0, 1), got {dropout_rate}")
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.key(seed), _ASYNC_SALT), round)
+    kd, kx = jax.random.split(key)
+    if delay_dist == "zero":
+        delays = np.zeros(num_clients, np.int32)
+    elif delay_dist == "uniform":
+        delays = np.asarray(jax.random.randint(kd, (num_clients,), 0,
+                                               max_delay + 1), np.int32)
+    else:  # geometric, p = 1/2 via inverse transform
+        u = np.asarray(jax.random.uniform(kd, (num_clients,)), np.float64)
+        delays = np.minimum(np.floor(np.log1p(-u) / np.log(0.5)),
+                            max_delay).astype(np.int32)
+    drops = np.asarray(jax.random.uniform(kx, (num_clients,)) < dropout_rate)
+    return delays, drops
+
+
+# spec -> incremental replay state; see _async_schedule. Purely a cache:
+# entries are reproducible from scratch, so sharing across trainer
+# instances (same spec => same schedule) is sound.
+_ASYNC_SCHEDULES: dict = {}
+
+
+def _async_schedule(spec: tuple, round: int):
+    """``(flush, weights)`` of round ``round`` for one async spec.
+
+    ``spec = (seed, num_clients, buffer_size, delay_dist, max_delay,
+    dropout_rate)``. Replays the deterministic client state machine from
+    round 0 (cached incrementally, so sequential training pays O(M) per
+    round and a mid-run resume pays one O(t·M) host-side replay):
+
+    - a client with no update in flight sends one every round; the round's
+      :func:`async_delay_stream` draw gives its arrival delay, or drops it
+      (mid-round dropout — the client just retries next round);
+    - an update arriving at round t joins the server buffer with report
+      round t (one buffer slot per client — a fresher arrival replaces a
+      staler unflushed one, which keeps the buffer a static [M] mask);
+    - when >= buffer_size updates sit in the buffer at the end of a round,
+      the server flushes: ``weights[i] = 1/sqrt(1 + t - report[i])`` for
+      buffered clients (the FedBuff staleness discount), 0 elsewhere, and
+      the buffer empties.
+
+    On non-flush rounds weights is None (aggregation is identity).
+    """
+    seed, m, buffer_size, delay_dist, max_delay, dropout_rate = spec
+    cache = _ASYNC_SCHEDULES.setdefault(spec, {
+        "next": 0,
+        "arrival": np.full(m, -1, np.int64),   # in-flight arrival round
+        "report": np.full(m, -1, np.int64),    # buffered report round
+        "out": [],
+    })
+    arrival, report = cache["arrival"], cache["report"]
+    while cache["next"] <= round:
+        t = cache["next"]
+        delays, drops = async_delay_stream(
+            seed, t, m, delay_dist=delay_dist, max_delay=max_delay,
+            dropout_rate=dropout_rate)
+        free = arrival < 0
+        send = free & ~drops
+        arrival[send] = t + delays[send]
+        arrived = arrival == t
+        report[arrived] = t
+        arrival[arrived] = -1
+        buffered = report >= 0
+        if int(buffered.sum()) >= buffer_size:
+            tau = (t - report).astype(np.float32)
+            weights = np.where(buffered,
+                               1.0 / np.sqrt(np.float32(1.0) + tau),
+                               np.float32(0.0)).astype(np.float32)
+            report[:] = -1
+            cache["out"].append((True, weights))
+        else:
+            cache["out"].append((False, None))
+        cache["next"] = t + 1
+    return cache["out"][round]
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncAggregator:
+    """Buffered straggler-tolerant aggregation (FedBuff, Nguyen et al. '22).
+
+    Every synchronous round in the engine is a barrier: one straggling
+    client stalls the whole mesh — exactly the single-point overload the
+    paper's edge layer argues against (Sec. I, Sec. III-E). This
+    aggregator removes the barrier in simulation: client updates *report*
+    to the server with per-round arrival delays and mid-round dropouts
+    (:func:`async_delay_stream`), the server buffers reports, and
+    aggregation triggers only when the buffer holds at least
+    ``buffer_size`` updates — never "when all M clients arrive". On a
+    flush each edge server takes the staleness-discounted weighted mean of
+    its covered *buffered* clients,
+
+        W_j = sum_i w_i W_(j,i) / sum_i w_i,   w_i = 1 / sqrt(1 + tau_i),
+
+    with tau_i = flush round - report round (the FedBuff discount), and
+    broadcasts it to all its clients; a server with no buffered reports
+    keeps its clients' weights untouched. Non-flush rounds are identity —
+    clients simply keep training locally.
+
+    Determinism contract (the same one ``participation_mask`` and the
+    gossip phase honor): the delay/dropout draws come from a key stream =
+    f(cfg.seed, absolute round) under a dedicated salt, the buffer is a
+    static [M] occupancy (freshest report per client wins — no Python-list
+    buffer, no gather/resize), and the flush weights reach the jitted
+    aggregation as a traced [M] vector with flush/skip as the only static
+    split. The whole delay/buffer/staleness schedule is therefore a pure
+    function of the checkpointed round: save/resume mid-buffer replays
+    rounds 0..t-1 on the host and continues bit-exactly
+    (``tests/test_async_agg.py``).
+
+    Correctness anchor: with ``buffer_size = M``, ``delay_dist="zero"``,
+    and ``dropout_rate = 0`` every client reports every round, the buffer
+    fills exactly at M, every tau is 0, and every weight is exactly 1.0 —
+    the flush reduces to the per-server mean over covered clients and the
+    histories reproduce :class:`FedAvgAggregator` bit-identically (pinned
+    in ``tests/test_async_agg.py``, the same way K=1 gossip pins dense
+    neighbor aggregation).
+    """
+
+    buffer_size: int = 1
+    delay_dist: str = "zero"      # "zero" | "uniform" | "geometric"
+    dropout_rate: float = 0.0     # P(update lost at send), per client-round
+    max_delay: int = 4            # delay cap in rounds
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.buffer_size < 1:
+            raise ValueError(f"buffer_size must be >= 1, got {self.buffer_size}")
+        if self.delay_dist not in ASYNC_DELAY_DISTS:
+            raise ValueError(f"unknown delay_dist {self.delay_dist!r}; "
+                             f"expected one of {ASYNC_DELAY_DISTS}")
+        if not 0.0 <= self.dropout_rate < 1.0:
+            raise ValueError(f"dropout_rate must be in [0, 1), "
+                             f"got {self.dropout_rate}")
+        if self.max_delay < 0:
+            raise ValueError(f"max_delay must be >= 0, got {self.max_delay}")
+
+    def _spec(self, num_clients: int) -> tuple:
+        if self.buffer_size > num_clients:
+            raise ValueError(
+                f"buffer_size={self.buffer_size} can never fill: the buffer "
+                f"holds at most one update per client (M={num_clients})")
+        return (self.seed, num_clients, self.buffer_size, self.delay_dist,
+                self.max_delay, self.dropout_rate)
+
+    def phase(self, round: int, num_clients: int) -> int:
+        """1 on flush rounds, 0 otherwise — the static arg of the jitted
+        aggregation call, so jit compiles exactly 2 variants."""
+        flush, _ = _async_schedule(self._spec(num_clients), round)
+        return int(flush)
+
+    def round_weights(self, round: int, num_clients: int):
+        """[M] float32 staleness weights on flush rounds, else None."""
+        _, weights = _async_schedule(self._spec(num_clients), round)
+        return None if weights is None else jnp.asarray(weights)
+
+    def aggregate(self, params, *, adj, num_servers, m_per, round=0, mask=None):
+        """``round`` is the flush phase (1 = flush); ``mask`` carries the
+        [M] staleness weights (zero = not buffered). Skip rounds are
+        identity. ``adj`` is unused: like :class:`FedAvgAggregator` the
+        flush is per-server — cross-server spread still happens through
+        the shared imputation round."""
+        if not round or mask is None:
+            return params
+        mask_g = jnp.asarray(mask, jnp.float32).reshape(num_servers, m_per)
+        den = jnp.sum(mask_g, axis=1)                       # [N] total weight
+
+        def agg(leaf):
+            grouped = leaf.reshape((num_servers, m_per) + leaf.shape[1:])
+            tail = (1,) * (leaf.ndim - 1)
+            shaped = mask_g.reshape((num_servers, m_per) + tail)
+            num = jnp.sum(grouped * shaped, axis=1)
+            den_s = den.reshape((num_servers,) + tail)
+            w = num / jnp.where(den_s > 0, den_s, 1.0)
+            keep = jnp.repeat(den > 0, m_per).reshape(
+                (num_servers * m_per,) + tail)
+            return jnp.where(keep, jnp.repeat(w, m_per, axis=0), leaf)
+        return jax.tree.map(agg, params)
 
 
 # ---------------------------------------------------------------------------

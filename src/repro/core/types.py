@@ -133,6 +133,19 @@ class FGLConfig:
     # The round-t mask is a pure function of (seed, t), so save/resume
     # reproduces the schedule exactly. CLI: `fgl_train --participation`.
     participation: float = 1.0
+    # FedBuff-style async aggregation (Sec. III-E straggler tolerance).
+    # async_buffer = B > 0 turns aggregation into a buffered flush: client
+    # updates report with per-round arrival delays drawn from `delay_dist`
+    # ("zero" | "uniform" | "geometric", capped at async_max_delay) and are
+    # lost mid-round with probability dropout_rate; the server aggregates
+    # (staleness-discounted, 1/sqrt(1+τ)) only when ≥ B updates are
+    # buffered. 0 disables the feature (synchronous aggregation, no async
+    # key stream is consumed). B = M with zero delays reproduces FedAvg
+    # bit-identically. CLI: `fgl_train --async-buffer/--delay-dist`.
+    async_buffer: int = 0
+    delay_dist: str = "zero"
+    dropout_rate: float = 0.0
+    async_max_delay: int = 4
     ae_iters: int = 5                  # T_ae
     assessor_iters: int = 3           # T_as
     ae_outer_iters: int = 3            # "while not convergent" outer loop bound

@@ -33,6 +33,17 @@ client-split strategy (``label_prop`` default, ``dirichlet`` label-skew
 non-IID with concentration ``--alpha``, ``degree`` degree-skew, ``random``
 edge-cut baseline); ``--participation R`` makes only ceil(R·M) clients
 contribute to each round's aggregation (partial participation, R in (0,1]).
+
+Straggler axis: ``--async-buffer B`` switches to FedBuff-style buffered
+aggregation (method ``spreadfgl_async``; ``--method FedGL`` keeps the star
+layout) — each round client updates report with arrival delays drawn from
+``--delay-dist`` (``zero`` | ``uniform`` | ``geometric``) and are lost
+mid-round with probability ``--dropout-rate``; the server flushes a
+staleness-discounted (1/sqrt(1+tau)) weighted mean once B updates are
+buffered instead of waiting for all M clients. The whole schedule is a pure
+function of (seed, round), so ``--resume`` reproduces it exactly, and
+``--async-buffer M --delay-dist zero`` is bit-identical to synchronous
+FedAvg.
 """
 from __future__ import annotations
 
@@ -87,6 +98,20 @@ def main() -> None:
                     help="cross-server exchange interval K for "
                          "spreadfgl_gossip (1 == dense-equivalent; selecting "
                          "a K forces the spreadfgl_gossip method)")
+    ap.add_argument("--async-buffer", type=int, default=0,
+                    help="FedBuff-style buffered aggregation: flush when B "
+                         "client updates are buffered instead of waiting for "
+                         "all M (0 = synchronous; selecting B forces the "
+                         "spreadfgl_async method)")
+    ap.add_argument("--delay-dist", default="zero",
+                    choices=("zero", "uniform", "geometric"),
+                    help="client arrival-delay distribution for "
+                         "--async-buffer (drawn from a key stream "
+                         "f(seed, round), independent of the training key)")
+    ap.add_argument("--dropout-rate", type=float, default=0.0,
+                    help="per-round probability a client update is lost "
+                         "mid-round before reaching the buffer "
+                         "(--async-buffer only; in [0, 1))")
     ap.add_argument("--json-out", default="")
     ap.add_argument("--save-state", default="",
                     help="write the final FGLState to this .npz")
@@ -131,17 +156,40 @@ def main() -> None:
         elif args.method != "spreadfgl_gossip":
             ap.error(f"--gossip-every applies to SpreadFGL/spreadfgl_gossip, "
                      f"not --method {args.method}")
+    if args.async_buffer < 0:
+        ap.error("--async-buffer must be >= 0 (0 == synchronous)")
+    if args.async_buffer > args.clients:
+        ap.error(f"--async-buffer {args.async_buffer} can never fill with "
+                 f"only {args.clients} clients (one buffer slot per client)")
+    if not 0.0 <= args.dropout_rate < 1.0:
+        ap.error("--dropout-rate must be in [0, 1)")
+    if args.async_buffer > 0:
+        # Picking a buffer size means buffered async aggregation; it replaces
+        # the synchronous aggregator of the stock compositions. Async FedGL
+        # keeps the star layout (one server covering all clients).
+        if args.method == "FedGL":
+            args.method, args.servers = "spreadfgl_async", 1
+        elif args.method == "SpreadFGL":
+            args.method = "spreadfgl_async"
+        elif args.method != "spreadfgl_async":
+            ap.error(f"--async-buffer applies to FedGL/SpreadFGL/"
+                     f"spreadfgl_async, not --method {args.method}")
+    elif args.method == "spreadfgl_async":
+        ap.error("--method spreadfgl_async needs --async-buffer >= 1")
     cfg = FGLConfig(hidden_dim=32, local_rounds=args.local_rounds,
                     imputation_interval=args.imputation_interval,
                     top_k_links=args.top_k, aug_max=12,
                     label_ratio=args.label_ratio, kernel_impl=args.impl,
                     gossip_every=args.gossip_every,
+                    async_buffer=args.async_buffer,
+                    delay_dist=args.delay_dist,
+                    dropout_rate=args.dropout_rate,
                     participation=args.participation, seed=args.seed)
     if args.impl != "reference":
         print(f"[fgl] kernel impl: {args.impl} (fused sim_topk + "
               f"sage_aggregate Pallas kernels)")
     kw = {}
-    if args.method in ("SpreadFGL", "spreadfgl_gossip"):
+    if args.method in ("SpreadFGL", "spreadfgl_gossip", "spreadfgl_async"):
         kw["num_servers"] = args.servers
         if args.edge_mesh:
             from repro.launch.mesh import make_edge_mesh
@@ -149,7 +197,8 @@ def main() -> None:
             print(f"[fgl] edge mesh: {kw['edge_mesh'].size} device(s) for "
                   f"N={args.servers}")
     if args.sim_shard:
-        if args.method not in ("FedGL", "SpreadFGL", "spreadfgl_gossip"):
+        if args.method not in ("FedGL", "SpreadFGL", "spreadfgl_gossip",
+                               "spreadfgl_async"):
             ap.error(f"--sim-shard needs an imputation round to shard; "
                      f"--method {args.method} has none")
         if "edge_mesh" in kw:
@@ -165,6 +214,10 @@ def main() -> None:
     if args.method == "spreadfgl_gossip":
         print(f"[fgl] gossip aggregation: cross-server exchange every "
               f"{args.gossip_every} round(s)")
+    if args.method == "spreadfgl_async":
+        print(f"[fgl] async aggregation: buffer B={args.async_buffer} of "
+              f"M={args.clients}, delays={args.delay_dist}, "
+              f"dropout={args.dropout_rate}")
     tr = registry.build(args.method, cfg, batch, **kw)
 
     if args.resume:

@@ -1,7 +1,42 @@
 """Shared pytest config. NOTE: no XLA_FLAGS here — smoke tests and benches
-must see the host's single device; only dryrun.py forces 512."""
+must see the host's single device; only dryrun.py forces 512.
+
+The expensive fixed-seed SBM graph / partitioned batch that most suites
+train on are session-scoped here: every module used to rebuild the
+identical `small` setup (same scale/seed/noise arguments), which dominated
+suite wall time. Fixtures only hand out *read-only* values (tests replace
+configs with ``dataclasses.replace`` and never mutate the batch), so
+sharing one instance across modules is safe.
+"""
 import pytest
+
+from repro.core.partition import partition_graph
+from repro.core.types import FGLConfig
+from repro.data.synthetic_graphs import DATASETS, make_sbm_graph
 
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: multi-device subprocess tests")
+
+
+@pytest.fixture(scope="session")
+def sbm_graph_small():
+    """The fixed-seed reduced-scale cora stand-in every suite trains on."""
+    return make_sbm_graph(DATASETS["cora"], scale=0.10, seed=1,
+                          feature_noise=3.0, signal_ratio=0.5)
+
+
+@pytest.fixture(scope="session")
+def small_batch(sbm_graph_small):
+    """Its canonical 4-client partition (aug 8, seed 0, 30% labels)."""
+    batch, _ = partition_graph(sbm_graph_small, 4, aug_max=8, seed=0,
+                               label_ratio=0.3)
+    return batch
+
+
+@pytest.fixture(scope="session")
+def small(small_batch):
+    """Fixed-seed 2-server / 4-client batch (fast enough for many fits)."""
+    cfg = FGLConfig(hidden_dim=16, local_rounds=2, imputation_interval=1,
+                    top_k_links=3, aug_max=8)
+    return small_batch, cfg

@@ -156,3 +156,7 @@ def test_required_paper_coverage():
         "PAPER_MAP.md lost its negative-sampling rows"
     assert "spreadfgl_gossip" in text, \
         "PAPER_MAP.md lost the gossip method row"
+    assert "spreadfgl_async" in text, \
+        "PAPER_MAP.md lost the async aggregation row"
+    assert "AsyncAggregator" in text, \
+        "PAPER_MAP.md lost the FedBuff-style aggregation row"

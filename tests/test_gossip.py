@@ -28,10 +28,9 @@ import pytest
 from repro.checkpoint import io
 from repro.core import gossip, registry
 from repro.core import strategies as S
-from repro.core.partition import partition_graph, ring_adjacency
+from repro.core.partition import ring_adjacency
 from repro.core.spreadfgl import make_spreadfgl, make_spreadfgl_gossip
 from repro.core.types import FGLConfig
-from repro.data.synthetic_graphs import DATASETS, make_sbm_graph
 
 
 def stacked_params(key, m):
@@ -42,13 +41,12 @@ def stacked_params(key, m):
 
 
 @pytest.fixture(scope="module")
-def small():
-    g = make_sbm_graph(DATASETS["cora"], scale=0.10, seed=1,
-                       feature_noise=3.0, signal_ratio=0.5)
-    batch, _ = partition_graph(g, 4, aug_max=8, seed=0, label_ratio=0.3)
+def small(small_batch):
+    # Overrides the session `small` (conftest.py): same shared batch, but
+    # K=2 so the gossip round-phase and imputation schedule interleave.
     cfg = FGLConfig(hidden_dim=16, local_rounds=2, imputation_interval=2,
                     top_k_links=3, aug_max=8)
-    return batch, cfg
+    return small_batch, cfg
 
 
 class TestAggregatorParity:

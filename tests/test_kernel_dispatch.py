@@ -17,22 +17,11 @@ import pytest
 
 from repro.core import imputation, registry
 from repro.core.fedgl import FGLTrainer
-from repro.core.partition import partition_graph
 from repro.core.spreadfgl import make_fedgl, make_spreadfgl
-from repro.core.types import FGLConfig
-from repro.data.synthetic_graphs import DATASETS, make_sbm_graph
 
-
-@pytest.fixture(scope="module")
-def small():
-    """2-server / 4-client batch; n_flat = M_per * n_pad is NOT a multiple of
-    the kernel block sizes (exercises the ops.py padding path in situ)."""
-    g = make_sbm_graph(DATASETS["cora"], scale=0.10, seed=1,
-                       feature_noise=3.0, signal_ratio=0.5)
-    batch, _ = partition_graph(g, 4, aug_max=8, seed=0, label_ratio=0.3)
-    cfg = FGLConfig(hidden_dim=16, local_rounds=2, imputation_interval=1,
-                    top_k_links=3, aug_max=8)
-    return batch, cfg
+# `small` comes from the session-scoped fixture in tests/conftest.py; its
+# n_flat = M_per * n_pad is NOT a multiple of the kernel block sizes, which
+# exercises the ops.py padding path in situ.
 
 
 def _round_outputs(tr, state):

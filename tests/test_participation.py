@@ -21,19 +21,9 @@ from repro.checkpoint import io
 from repro.core import registry
 from repro.core import strategies as S
 from repro.core.fedgl import FGLTrainer
-from repro.core.partition import partition_graph, ring_adjacency
-from repro.core.types import FGLConfig
-from repro.data.synthetic_graphs import DATASETS, make_sbm_graph
+from repro.core.partition import ring_adjacency
 
-
-@pytest.fixture(scope="module")
-def small():
-    g = make_sbm_graph(DATASETS["cora"], scale=0.10, seed=1,
-                       feature_noise=3.0, signal_ratio=0.5)
-    batch, _ = partition_graph(g, 4, aug_max=8, seed=0, label_ratio=0.3)
-    cfg = FGLConfig(hidden_dim=16, local_rounds=2, imputation_interval=1,
-                    top_k_links=3, aug_max=8)
-    return batch, cfg
+# `small` comes from the session-scoped fixture in tests/conftest.py.
 
 
 def _stack_params(key, m, shape=(3, 2)):

@@ -12,15 +12,14 @@ import numpy as np
 import pytest
 
 from repro.core import partition as P
-from repro.data.synthetic_graphs import DATASETS, make_sbm_graph
 
 ALL_PARTITIONERS = sorted(P.PARTITIONERS)
 
 
 @pytest.fixture(scope="module")
-def graph():
-    return make_sbm_graph(DATASETS["cora"], scale=0.10, seed=1,
-                          feature_noise=3.0, signal_ratio=0.5)
+def graph(sbm_graph_small):
+    # The shared session graph (tests/conftest.py) — same fixed-seed build.
+    return sbm_graph_small
 
 
 class TestAssignContract:

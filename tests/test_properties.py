@@ -102,6 +102,105 @@ def test_attention_oracle_rows_are_convex_combinations(sq, skv, seed):
     assert out.min() >= vmin - 1e-4 and out.max() <= vmax + 1e-4
 
 
+@given(n=st.integers(6, 48), k=st.integers(1, 5), seed=st.integers(0, 200),
+       n_slabs=st.integers(1, 4), perm_seed=st.integers(0, 100))
+@settings(**_SETTINGS)
+def test_topk_merge_fold_order_invariance_and_lax_tiebreak(n, k, seed,
+                                                           n_slabs, perm_seed):
+    """Folding candidate slabs in ANY order yields jax.lax.top_k of the full
+    row — values bitwise, indices including the smallest-index tie-break.
+
+    Values are quantized to a coarse grid so ties genuinely occur, and a
+    random subset is masked to -inf to exercise the (-inf, -1) convention.
+    """
+    from repro.kernels.sim_topk import topk_merge
+
+    key = jax.random.key(seed)
+    vals = jnp.round(jax.random.uniform(key, (n,)) * 4.0) / 4.0  # many ties
+    masked = jax.random.uniform(jax.random.fold_in(key, 1), (n,)) < 0.25
+    vals = jnp.where(masked, -jnp.inf, vals)
+    want_v, want_i = jax.lax.top_k(vals, k)
+
+    bounds = sorted(set(
+        [0, n] + list(np.random.RandomState(perm_seed).randint(1, n,
+                                                               n_slabs))))
+    slabs = [(vals[a:b], jnp.arange(a, b, dtype=jnp.int32))
+             for a, b in zip(bounds[:-1], bounds[1:]) if b > a]
+    order = np.random.RandomState(perm_seed + 1).permutation(len(slabs))
+    run_v = jnp.full((k,), -jnp.inf)
+    run_i = jnp.full((k,), -1, jnp.int32)
+    for j in order:
+        run_v, run_i = topk_merge(run_v, run_i, *slabs[j])
+
+    np.testing.assert_array_equal(np.asarray(run_v), np.asarray(want_v))
+    live = np.asarray(want_v) > -np.inf
+    # lax.top_k emits real indices for -inf entries; the merge emits -1.
+    np.testing.assert_array_equal(np.asarray(run_i)[live],
+                                  np.asarray(want_i)[live])
+    np.testing.assert_array_equal(np.asarray(run_i)[~live],
+                                  np.full((~live).sum(), -1))
+
+
+@given(m=st.integers(1, 24), rho=st.floats(0.01, 1.0), seed=st.integers(0, 200))
+@settings(**_SETTINGS)
+def test_participation_mask_exact_count_and_determinism(m, rho, seed):
+    """Exactly ceil(rho*M) participants, 0/1 values, static [M] shape, and
+    the same key always reproduces the same mask."""
+    import math
+
+    from repro.core import strategies as S
+
+    key = jax.random.key(seed)
+    mask = S.participation_mask(key, m, rho)
+    assert mask.shape == (m,) and mask.dtype == jnp.float32
+    assert set(np.unique(np.asarray(mask))) <= {0.0, 1.0}
+    assert int(np.asarray(mask).sum()) == max(1, math.ceil(rho * m))
+    np.testing.assert_array_equal(
+        np.asarray(mask), np.asarray(S.participation_mask(key, m, rho)))
+
+
+@given(seed=st.integers(0, 500), t=st.integers(0, 50), m=st.integers(1, 32),
+       dist=st.sampled_from(["zero", "uniform", "geometric"]),
+       max_delay=st.integers(0, 6), drop=st.floats(0.0, 0.9))
+@settings(**_SETTINGS)
+def test_async_delay_stream_deterministic_and_bounded(seed, t, m, dist,
+                                                      max_delay, drop):
+    """Same (seed, round) -> same delays and drops; delays are int32 in
+    [0, max_delay]; zero-distribution delays are all zero."""
+    from repro.core import strategies as S
+
+    d1, x1 = S.async_delay_stream(seed, t, m, delay_dist=dist,
+                                  max_delay=max_delay, dropout_rate=drop)
+    d2, x2 = S.async_delay_stream(seed, t, m, delay_dist=dist,
+                                  max_delay=max_delay, dropout_rate=drop)
+    np.testing.assert_array_equal(d1, d2)
+    np.testing.assert_array_equal(x1, x2)
+    assert d1.shape == (m,) and d1.dtype == np.int32 and x1.shape == (m,)
+    assert d1.min() >= 0 and d1.max() <= max(max_delay, 0)
+    if dist == "zero":
+        assert not d1.any()
+    if drop == 0.0:
+        assert not x1.any()
+
+
+@given(seed=st.integers(0, 500), t=st.integers(0, 50))
+@settings(**_SETTINGS)
+def test_async_stream_disjoint_from_training_and_participation(seed, t):
+    """The async key stream never collides with the training key or the
+    participation stream for any (seed, round) — enabling async aggregation
+    cannot perturb either."""
+    from repro.core import strategies as S
+
+    data = lambda k: np.asarray(jax.random.key_data(k))  # noqa: E731
+    k_async = jax.random.fold_in(
+        jax.random.fold_in(jax.random.key(seed), S._ASYNC_SALT), t)
+    k_part = jax.random.fold_in(
+        jax.random.fold_in(jax.random.key(seed), 0x9A57), t)
+    k_train = jax.random.fold_in(jax.random.key(seed), t)
+    assert not np.array_equal(data(k_async), data(k_part))
+    assert not np.array_equal(data(k_async), data(k_train))
+
+
 @given(b=st.integers(1, 4), s=st.sampled_from([16, 32]), seed=st.integers(0, 30))
 @settings(max_examples=10, deadline=None)
 def test_causal_forward_prefix_invariance(b, s, seed):

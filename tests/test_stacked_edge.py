@@ -25,13 +25,9 @@ from repro.kernels import ops, ref
 
 
 @pytest.fixture(scope="module")
-def setup2():
-    """Fixed-seed 2-server / 4-client batch."""
-    g = make_sbm_graph(DATASETS["cora"], scale=0.10, seed=1,
-                       feature_noise=3.0, signal_ratio=0.5)
-    batch, _ = partition_graph(g, 4, aug_max=8, seed=0, label_ratio=0.3)
-    cfg = FGLConfig(hidden_dim=16, local_rounds=2, imputation_interval=1,
-                    top_k_links=3, aug_max=8)
+def setup2(small):
+    """Fixed-seed 2-server / 4-client trainer + state on the shared batch."""
+    batch, cfg = small
     tr = make_spreadfgl(cfg, batch, num_servers=2)
     state = tr.init(jax.random.key(0), batch)
     return tr, state

@@ -14,22 +14,11 @@ from repro.core import registry
 from repro.core import strategies as S
 from repro.core.baselines import REGISTRY as BASELINES
 from repro.core.fedgl import FGLTrainer
-from repro.core.partition import partition_graph
 from repro.core.spreadfgl import make_spreadfgl
-from repro.core.types import FGLConfig
-from repro.data.synthetic_graphs import DATASETS, make_sbm_graph
 
 
-@pytest.fixture(scope="module")
-def small():
-    """Fixed-seed 2-server / 4-client batch (fast enough for many fits)."""
-    g = make_sbm_graph(DATASETS["cora"], scale=0.10, seed=1,
-                       feature_noise=3.0, signal_ratio=0.5)
-    batch, _ = partition_graph(g, 4, aug_max=8, seed=0, label_ratio=0.3)
-    cfg = FGLConfig(hidden_dim=16, local_rounds=2, imputation_interval=1,
-                    top_k_links=3, aug_max=8)
-    return batch, cfg
-
+# The `small` fixture (this exact graph/partition/config) is session-scoped
+# in tests/conftest.py and shared across suites.
 
 # Fixed-seed histories of fit(jax.random.key(0), batch, rounds=4) on the
 # `small` fixture. Originally captured at the commit before the strategy
@@ -194,6 +183,34 @@ class TestStrategies:
         with pytest.raises(ValueError, match="num_servers"):
             make_spreadfgl(cfg, batch, num_servers=4,
                            adjacency=np.ones((2, 2), np.float32))
+
+    def test_custom_topology_rejects_non_square(self):
+        with pytest.raises(ValueError, match="square"):
+            S.CustomTopology(np.ones((2, 3), np.float32)).build(4)
+
+    def test_custom_topology_rejects_indivisible(self):
+        with pytest.raises(ValueError, match="divide"):
+            S.CustomTopology(np.ones((3, 3), np.float32)).build(4)
+
+    def test_custom_topology_layout(self):
+        adj = np.asarray([[1, 0], [0, 1]], np.float32)
+        lay = S.CustomTopology(adj).build(6)
+        assert lay.num_servers == 2 and lay.clients_per_server == 3
+        np.testing.assert_array_equal(lay.adjacency, adj)
+        np.testing.assert_array_equal(lay.server_of_client,
+                                      np.repeat(np.arange(2), 3))
+
+    def test_identity_aggregator_ignores_round_and_mask(self):
+        """Identity stays identity under every (round, mask) combination —
+        the `local` baseline must be untouched by participation or phase."""
+        params = {"w": np.arange(12.0).reshape(6, 2)}
+        for round_, mask in [(0, None), (1, None),
+                             (0, np.asarray([1, 0, 1, 0, 1, 0], np.float32))]:
+            out = S.IdentityAggregator().aggregate(
+                params, adj=np.eye(2, dtype=np.float32), num_servers=2,
+                m_per=3, round=round_, mask=mask)
+            np.testing.assert_array_equal(np.asarray(out["w"]),
+                                          params["w"])
 
     def test_identity_aggregator_never_mixes(self, small):
         batch, cfg = small
